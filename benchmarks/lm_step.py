@@ -1,0 +1,64 @@
+"""Framework-level step microbenchmark: smoke-scale train + decode step
+per architecture on CPU (wall time), plus pointers to the dry-run roofline
+table for the full-size cells (experiments/dryrun/)."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.models import get_model
+from repro.optim import OptConfig, apply_updates, init_opt_state
+
+
+def run_lm_step(archs=None, B=2, S=64, repeats=2) -> List[Dict]:
+    rows = []
+    for arch in (archs or ARCHS):
+        cfg = get_smoke_config(arch)
+        model = get_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        opt_cfg = OptConfig()
+        opt = init_opt_state(params, opt_cfg)
+        kt, kl, kf = jax.random.split(jax.random.PRNGKey(1), 3)
+        batch = {"tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab),
+                 "labels": jax.random.randint(kl, (B, S), 0, cfg.vocab)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.random.normal(kf, (B, S, cfg.d_model),
+                                                jnp.float32)
+
+        @jax.jit
+        def step(p, o, b):
+            loss, g = jax.value_and_grad(model.loss)(p, b)
+            p2, o2 = apply_updates(p, g, o, opt_cfg)
+            return p2, o2, loss
+
+        p2, o2, loss = step(params, opt, batch)
+        jax.block_until_ready(loss)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            p2, o2, loss = step(p2, o2, batch)
+        jax.block_until_ready(loss)
+        train_ms = (time.perf_counter() - t0) / repeats * 1e3
+
+        if cfg.family == "encdec":
+            logits, cache = model.prefill(params, batch["tokens"],
+                                          batch["frames"])
+        else:
+            logits, cache = model.prefill(params, batch["tokens"])
+        dstep = jax.jit(model.decode_step)
+        tok = batch["tokens"][:, :1]
+        logits, cache = dstep(params, cache, tok)
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            logits, cache = dstep(params, cache, tok)
+        jax.block_until_ready(logits)
+        decode_ms = (time.perf_counter() - t0) / repeats * 1e3
+
+        rows.append({"arch": arch, "train_step_ms": train_ms,
+                     "decode_step_ms": decode_ms,
+                     "loss": float(loss)})
+    return rows

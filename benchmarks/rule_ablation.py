@@ -1,0 +1,40 @@
+"""§V-A validation: WHY the paper restricts its rule set.
+
+The paper: "ACC Saturator can rewrite subtraction, division, memory
+access order, ... these rules can increase the size of e-graphs and lead
+to slow extraction ... we restrict the tool to only use the set of rules
+mentioned earlier." This benchmark quantifies that trade-off on our
+suite: Table-I rules vs Table-I + the extended set (sub/div/neg/square
+rewrites) vs + TPU strength reductions.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core import SaturatorConfig, saturate_program
+from .kernel_suite import SUITE
+
+
+def run_rule_ablation() -> List[Dict]:
+    rows = []
+    variants = {
+        "paper": dict(extended_rules=False, tpu_rules=False),
+        "paper+tpu": dict(extended_rules=False, tpu_rules=True),
+        "extended": dict(extended_rules=True, tpu_rules=False),
+        "extended+tpu": dict(extended_rules=True, tpu_rules=True),
+    }
+    for name, mk in SUITE.items():
+        row = {"kernel": name}
+        for vname, kw in variants.items():
+            cfg = SaturatorConfig(mode="accsat", **kw)
+            sk = saturate_program(mk(), cfg)
+            rep = sk.report()
+            row[vname] = {
+                "e_nodes": rep["sat_nodes"],
+                "sat_s": round(rep["sat_s"], 4),
+                "extract_s": round(rep["extract_s"], 4),
+                "dag_cost": rep["dag_cost"],
+                "stop": rep["sat_stop"],
+            }
+        rows.append(row)
+    return rows

@@ -1,0 +1,49 @@
+"""Quickstart: saturate a kernel with ACC Saturator-on-TPU and inspect
+everything the paper's pipeline produces.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (KernelProgram, SaturatorConfig, c, run_reference,
+                        saturate_all_modes, v)
+
+# --- 1. Write the body of a parallel loop in the kernel DSL -----------------
+# (this is Listing 1 of the paper: the matmul kernel under OpenACC)
+p = KernelProgram("matmul_tile")
+a = p.array_in("a")
+b = p.array_in("b")
+cm = p.array_in("cmat")
+p.array_out("r")
+for s in ("alpha", "beta", "i", "j", "ax"):
+    p.scalar(s)
+p.let("tmp", c(0.0))
+with p.for_("l", 0, v("ax")):
+    p.let("tmp", v("tmp") + a[v("i"), v("l")] * b[v("l"), v("j")])
+p.store("r", v("alpha") * v("tmp") + v("beta") * cm[v("i"), v("j")],
+        v("i"), v("j"))
+
+# --- 2. Saturate under all four paper configurations -------------------------
+kernels = saturate_all_modes(p)
+print("mode       cost  ops  loads  fma   (paper Fig. 2 columns)")
+for mode, sk in kernels.items():
+    st = sk.kernel.stats
+    print(f"{mode:9s} {sk.extraction.dag_cost:6.0f} {st.n_ops:4d} "
+          f"{st.n_loads:5d} {st.n_fma:4d}")
+
+# --- 3. The ACCSAT-generated JAX code (temp vars + bulk load, Listing 3) -----
+print("\n--- generated code (accsat) ---")
+print(kernels["accsat"].source)
+
+# --- 4. Execute and validate against the reference interpreter ---------------
+rng = np.random.default_rng(0)
+A, B, C = (rng.normal(size=(4, 5)), rng.normal(size=(5, 6)),
+           rng.normal(size=(4, 6)))
+inputs = dict(a=A, b=B, cmat=C, r=np.zeros((4, 6)), alpha=1.5, beta=0.5,
+              i=2, j=3, ax=5)
+ref = run_reference(p, inputs)
+out = kernels["accsat"](jnp.asarray(A), jnp.asarray(B), jnp.asarray(C),
+                        jnp.zeros((4, 6)), 1.5, 0.5, 2, 3, 5)
+assert np.allclose(np.asarray(out[0]), ref["r"])
+print("matches reference interpreter ✓")

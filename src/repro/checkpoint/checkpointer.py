@@ -1,0 +1,170 @@
+"""Sharded, async, resharding-capable checkpointing.
+
+Layout (one directory per step):
+  step_000123/
+    manifest.json      — pytree structure, shapes, dtypes, mesh, step
+    shard_<host>.npz   — this host's param/opt shards (flattened leaves)
+    _COMMITTED         — atomic commit marker (written last)
+
+Properties needed at 1000-node scale, all implemented here:
+  * per-host shard files (no single-writer bottleneck);
+  * async save (background thread; training continues, `wait()` joins);
+  * atomic commit marker so a killed run never restores a torn checkpoint;
+  * restore with *resharding*: a checkpoint saved on N hosts restores onto
+    M hosts (elastic) by reading the union of shards and re-slicing;
+  * keeps the newest K checkpoints, deletes older ones only after commit.
+
+On this single-process container every "host" writes to the same
+filesystem — identical code paths, exercised by tests/test_checkpoint.py
+including kill-before-commit and N→M elastic restore.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class CheckpointMeta:
+    step: int
+    n_hosts: int
+    tree_def: str
+    leaf_info: List[Tuple[str, list, str]]  # (name, shape, dtype)
+    extra: Dict[str, Any]
+
+
+def _leaf_names(tree) -> List[str]:
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    names = []
+    for path, _ in paths:
+        parts = []
+        for p in path:
+            parts.append(str(getattr(p, "key", getattr(p, "idx", "?"))))
+        names.append("/".join(parts))
+    return names
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._pending: Optional[threading.Thread] = None
+
+    # -- save --------------------------------------------------------------------
+    def save(self, step: int, tree, *, host_id: int = 0, n_hosts: int = 1,
+             extra: Optional[Dict[str, Any]] = None,
+             async_: bool = True) -> None:
+        """Save this host's shard of ``tree`` (host slices along leading
+        axis round-robin; a real deployment passes each host's local
+        addressable shards)."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        names = _leaf_names(tree)
+        arrays = [np.asarray(x) for x in leaves]
+
+        def work():
+            step_dir = self.dir / f"step_{step:09d}"
+            step_dir.mkdir(parents=True, exist_ok=True)
+            shard: Dict[str, np.ndarray] = {}
+            for i, (name, arr) in enumerate(zip(names, arrays)):
+                lo, hi = _host_slice(arr.shape, host_id, n_hosts)
+                piece = arr[lo:hi] if arr.ndim else arr
+                # npz cannot round-trip ml_dtypes (bf16 loads as raw void):
+                # store a uint16 view, restored by manifest dtype
+                if str(piece.dtype) == "bfloat16":
+                    piece = piece.view(np.uint16)
+                shard[f"{i}"] = piece
+            np.savez(step_dir / f"shard_{host_id}.npz", **shard)
+            if host_id == 0:
+                meta = CheckpointMeta(
+                    step=step, n_hosts=n_hosts,
+                    tree_def=str(treedef),
+                    leaf_info=[(n, list(a.shape), str(a.dtype))
+                               for n, a in zip(names, arrays)],
+                    extra=extra or {})
+                (step_dir / "manifest.json").write_text(
+                    json.dumps(dataclasses.asdict(meta)))
+            # commit marker written LAST (atomicity)
+            (step_dir / f"_COMMITTED_{host_id}").touch()
+            self._gc()
+
+        if async_:
+            self.wait()
+            self._pending = threading.Thread(target=work, daemon=True)
+            self._pending.start()
+        else:
+            work()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # -- restore ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        steps = []
+        for p in self.dir.glob("step_*"):
+            if any(p.glob("_COMMITTED_*")) and (p / "manifest.json").exists():
+                steps.append(int(p.name.split("_")[1]))
+        return max(steps) if steps else None
+
+    def restore(self, tree_like, step: Optional[int] = None,
+                ) -> Tuple[Any, Dict[str, Any]]:
+        """Rebuild full arrays from ALL committed shards (any host count),
+        shaped like ``tree_like``. Returns (tree, extra)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError("no committed checkpoint found")
+        step_dir = self.dir / f"step_{step:09d}"
+        meta = json.loads((step_dir / "manifest.json").read_text())
+        n_hosts = meta["n_hosts"]
+        shards = []
+        for h in range(n_hosts):
+            f = step_dir / f"shard_{h}.npz"
+            if not (step_dir / f"_COMMITTED_{h}").exists():
+                raise IOError(f"shard {h} of step {step} uncommitted")
+            shards.append(np.load(f))
+        leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+        import ml_dtypes
+        out = []
+        for i, ref in enumerate(leaves):
+            parts = [sh[f"{i}"] for sh in shards]
+            if np.ndim(parts[0]) == 0:
+                full = parts[0]
+            else:
+                full = np.concatenate(parts, axis=0)
+            saved_dtype = meta["leaf_info"][i][2]
+            if saved_dtype == "bfloat16" and full.dtype == np.uint16:
+                full = full.view(ml_dtypes.bfloat16)
+            ref_shape = tuple(ref.shape)
+            if tuple(full.shape) != ref_shape:
+                raise ValueError(
+                    f"leaf {i}: checkpoint {full.shape} vs model {ref_shape}")
+            dtype = ref.dtype if hasattr(ref, "dtype") else full.dtype
+            out.append(full.astype(dtype))
+        return jax.tree_util.tree_unflatten(treedef, out), meta["extra"]
+
+    # -- gc ------------------------------------------------------------------------
+    def _gc(self):
+        steps = sorted(
+            (int(p.name.split("_")[1]), p) for p in self.dir.glob("step_*")
+            if any(p.glob("_COMMITTED_*")))
+        for _, p in steps[:-self.keep] if len(steps) > self.keep else []:
+            shutil.rmtree(p, ignore_errors=True)
+
+
+def _host_slice(shape, host_id: int, n_hosts: int) -> Tuple[int, int]:
+    if not shape:
+        return 0, 1
+    n = shape[0]
+    per = (n + n_hosts - 1) // n_hosts
+    lo = min(host_id * per, n)
+    return lo, min(lo + per, n)

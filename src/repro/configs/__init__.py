@@ -1,0 +1,83 @@
+"""Assigned architectures (exact public configs) + reduced smoke variants.
+
+``get_config(arch)`` returns the full config; ``get_smoke_config(arch)``
+returns a tiny same-family variant for CPU smoke tests. ``SHAPES`` defines
+the assigned input-shape set; ``cells()`` enumerates the 40 (arch × shape)
+dry-run cells with applicability flags.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+from repro.models import ModelConfig
+
+ARCHS = [
+    "minitron_4b", "mistral_nemo_12b", "mistral_large_123b", "granite_8b",
+    "mamba2_1p3b", "qwen2_vl_2b", "dbrx_132b", "arctic_480b",
+    "whisper_small", "zamba2_2p7b",
+]
+
+# canonical ids as assigned (dashes/dots)
+ARCH_IDS = {
+    "minitron-4b": "minitron_4b",
+    "mistral-nemo-12b": "mistral_nemo_12b",
+    "mistral-large-123b": "mistral_large_123b",
+    "granite-8b": "granite_8b",
+    "mamba2-1.3b": "mamba2_1p3b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "dbrx-132b": "dbrx_132b",
+    "arctic-480b": "arctic_480b",
+    "whisper-small": "whisper_small",
+    "zamba2-2.7b": "zamba2_2p7b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def _module(arch: str):
+    arch = ARCH_IDS.get(arch, arch)
+    return importlib.import_module(f"repro.configs.{arch}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).config()
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return _module(arch).smoke_config()
+
+
+def applicable(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    """Is (arch, shape) a runnable cell? Returns (ok, reason_if_not)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 500k decode is quadratic "
+                       "in compute/KV; skipped per assignment "
+                       "(run for SSM/hybrid only)")
+    return True, ""
+
+
+def cells() -> List[Tuple[str, str, bool, str]]:
+    """All 40 (arch, shape, applicable, reason) cells."""
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for sname, spec in SHAPES.items():
+            ok, why = applicable(cfg, spec)
+            out.append((arch, sname, ok, why))
+    return out

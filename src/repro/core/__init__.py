@@ -1,0 +1,29 @@
+# The paper's primary contribution: equality saturation for directive-style
+# parallel code, adapted to JAX/TPU (see DESIGN.md).
+from .cost import CostModel, TPUCostModel, count_flops, count_ops, instruction_mix
+from .dsl import (ArrayHandle, Expr, KernelProgram, c, call, exp, fma,
+                  gelu_tanh, log, maximum, minimum, recip, rmax, rmean,
+                  rothalf, rsqrt, rsum, select, sigmoid, silu, softplus,
+                  sqrt, square, tanh, toint, v)
+from .egraph import EGraph, P, Pattern, PatVar, V, add_expr
+from .extract import ExtractionResult, extract_dag, extract_exact
+from .ir import ENode
+from .jaxpr_bridge import BridgeUnsupported, maybe_saturate, saturate_jax_fn
+from .pallasgen import PallasGenerator, TileOp, make_tile_op, pick_row_block
+from .pipeline import (MODES, SaturatedKernel, SaturatorConfig,
+                       saturate_all_modes, saturate_program)
+from .reference import run_reference
+from .rules import (EXTENDED_RULES, PAPER_RULES, TPU_RULES, Rule, run_rules)
+from .ssa import SSAResult, build_ssa
+
+__all__ = [
+    "CostModel", "TPUCostModel", "count_flops", "count_ops",
+    "instruction_mix", "ArrayHandle", "Expr", "KernelProgram", "EGraph",
+    "ENode", "ExtractionResult", "extract_dag", "extract_exact",
+    "BridgeUnsupported", "maybe_saturate", "saturate_jax_fn",
+    "PallasGenerator", "TileOp", "make_tile_op", "pick_row_block", "MODES",
+    "SaturatedKernel", "SaturatorConfig", "saturate_all_modes",
+    "saturate_program", "run_reference", "PAPER_RULES", "EXTENDED_RULES",
+    "TPU_RULES", "Rule", "run_rules", "build_ssa", "SSAResult",
+    "add_expr", "P", "V", "Pattern", "PatVar", "toint",
+]

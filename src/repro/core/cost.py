@@ -1,0 +1,100 @@
+"""Cost models (paper §V-B).
+
+The paper's model: constants cost 0, each input variable or phi costs 1,
+every computational operation costs 10 except division and modular
+arithmetic, and each memory access, division, modular arithmetic, or
+function call costs 100.
+
+``TPUCostModel`` is the beyond-paper variant tuned from TPU v5e
+instruction timing: transcendentals are mid-cost (VPU multi-pass), fma
+equals one op (MXU/VPU native), loads keep the paper's 10x-over-compute
+ratio (HBM→VMEM).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from .ir import ENode
+
+
+class CostModel:
+    """Paper cost model. Cost of one e-node, excluding children."""
+
+    name = "paper"
+    CONST = 0.0
+    VAR = 1.0
+    PHI = 1.0
+    OP = 10.0
+    EXPENSIVE = 100.0  # memory access, div, mod, call
+
+    def node_cost(self, node: ENode) -> float:
+        op = node.op
+        if op == "const":
+            return self.CONST
+        if op in ("var", "array"):
+            return self.VAR
+        if op in ("phi", "phi_loop"):
+            return self.PHI
+        if op in ("load", "call"):
+            return self.EXPENSIVE
+        if op in ("div", "mod"):
+            return self.EXPENSIVE
+        if op == "tuple":
+            return 0.0
+        return self.OP
+
+
+class TPUCostModel(CostModel):
+    """TPU v5e-tuned costs (beyond-paper, DESIGN.md §2).
+
+    Rationale: VPU issues one 8x128 vector op/cycle; exp/log/tanh/rsqrt are
+    ~4-8 pass pipelined sequences; true divide is ~10 passes; an HBM load at
+    819 GB/s against 197 TFLOP/s bf16 compute gives ~240 flops/float of
+    headroom -> keep memory at the paper's 10:1 over plain ops but price
+    transcendentals between the two.
+    """
+
+    name = "tpu_v5e"
+    TRANSCENDENTAL = 40.0
+
+    def node_cost(self, node: ENode) -> float:
+        op = node.op
+        if op in ("exp", "log", "tanh", "sigmoid", "pow"):
+            return self.TRANSCENDENTAL
+        if op in ("sqrt", "rsqrt", "recip"):
+            return self.TRANSCENDENTAL / 2
+        if op == "neg":
+            # sign flips fold into FMA operands on the VPU/MXU — free.
+            # This is what makes FMA2/FMA3 (paper Table I) strictly win
+            # over sub+mul under the TPU model (they tie under the paper's).
+            return 0.0
+        return super().node_cost(node)
+
+
+def instruction_mix(node_choice: Dict[int, ENode]) -> Dict[str, int]:
+    """Instruction histogram of an extraction choice (Table IV analog)."""
+    mix: Dict[str, int] = {}
+    for node in node_choice.values():
+        mix[node.op] = mix.get(node.op, 0) + 1
+    return mix
+
+
+def count_ops(node_choice: Dict[int, ENode]) -> int:
+    """Executed 'instructions': everything but consts/vars/arrays/tuples."""
+    skip = ("const", "var", "array", "tuple")
+    return sum(1 for n in node_choice.values() if n.op not in skip)
+
+
+def count_flops(node_choice: Dict[int, ENode]) -> int:
+    """Arithmetic op count with fma=2 (for roofline-style accounting)."""
+    flops = 0
+    for n in node_choice.values():
+        if n.op == "fma":
+            flops += 2
+        elif n.op in ("add", "sub", "mul", "div", "neg", "min", "max",
+                      "square", "recip"):
+            flops += 1
+        elif n.op in ("exp", "log", "sqrt", "rsqrt", "tanh", "sigmoid",
+                      "pow"):
+            flops += 8  # polynomial-expansion estimate
+    return flops

@@ -1,0 +1,211 @@
+"""CSE-aware extraction of optimal terms from an e-graph (paper §IV-B).
+
+The paper extracts the minimum total cost selection where common e-classes
+are counted ONCE (CSE folded into extraction) using an ILP solver (CBC).
+No ILP solver ships in this environment, so we reproduce the objective
+with:
+
+  1. a bottom-up fixed point over *tree* cost (classic egg extractor) —
+     gives a valid acyclic selection fast;
+  2. true *DAG* cost evaluation (shared classes counted once);
+  3. hill-climbing local search over per-class node choices against the
+     true DAG objective, with acyclicity checking — our ILP stand-in.
+
+`extract_exact` brute-forces tiny graphs and is used by tests to verify
+the local search reaches the optimum where enumeration is feasible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+from .cost import CostModel
+from .egraph import EGraph
+from .ir import ENode
+
+INF = float("inf")
+
+
+@dataclasses.dataclass
+class ExtractionResult:
+    choice: Dict[int, ENode]           # canonical cid -> chosen e-node
+    roots: Tuple[int, ...]             # canonical root cids
+    dag_cost: float
+    tree_cost: float
+    wall_s: float = 0.0
+    improved_by_search: float = 0.0    # dag-cost reduction from local search
+
+    def term(self, eg: EGraph, root: Optional[int] = None):
+        from .egraph import extract_to_term
+        root = self.roots[0] if root is None else eg.find(root)
+        return extract_to_term(self.choice, eg, root)
+
+
+# -- step 1: bottom-up tree-cost fixed point ------------------------------------
+def _tree_costs(eg: EGraph, cm: CostModel):
+    best_cost: Dict[int, float] = {}
+    best_node: Dict[int, ENode] = {}
+    classes = eg.eclasses()
+    changed = True
+    while changed:
+        changed = False
+        for cid, ec in classes.items():
+            for node in ec.nodes:
+                node = eg.canonicalize(node)
+                cost = cm.node_cost(node)
+                ok = True
+                for ch in node.children:
+                    ch_cost = best_cost.get(eg.find(ch))
+                    if ch_cost is None:
+                        ok = False
+                        break
+                    cost += ch_cost
+                if ok and cost < best_cost.get(cid, INF):
+                    best_cost[cid] = cost
+                    best_node[cid] = node
+                    changed = True
+    return best_cost, best_node
+
+
+# -- DAG cost of a choice map ------------------------------------------------------
+def dag_cost_of(eg: EGraph, cm: CostModel, choice: Dict[int, ENode],
+                roots: Sequence[int]) -> float:
+    """Sum node costs over classes reachable from roots, each counted once.
+
+    Returns inf on a cyclic selection.
+    """
+    cost = 0.0
+    state: Dict[int, int] = {}  # 0=on stack, 1=done
+    stack: List[Tuple[int, bool]] = [(eg.find(r), False) for r in roots]
+    while stack:
+        cid, processed = stack.pop()
+        cid = eg.find(cid)
+        if processed:
+            state[cid] = 1
+            continue
+        st = state.get(cid)
+        if st == 1:
+            continue
+        if st == 0:
+            return INF  # cycle
+        node = choice.get(cid)
+        if node is None:
+            return INF
+        state[cid] = 0
+        stack.append((cid, True))
+        cost += cm.node_cost(node)
+        for ch in node.children:
+            ch = eg.find(ch)
+            if state.get(ch) is None:
+                stack.append((ch, False))
+            elif state.get(ch) == 0:
+                return INF
+    return cost
+
+
+def reachable(eg: EGraph, choice: Dict[int, ENode],
+              roots: Sequence[int]) -> Set[int]:
+    seen: Set[int] = set()
+    stack = [eg.find(r) for r in roots]
+    while stack:
+        cid = stack.pop()
+        if cid in seen:
+            continue
+        seen.add(cid)
+        node = choice.get(cid)
+        if node is None:
+            continue
+        for ch in node.children:
+            ch = eg.find(ch)
+            if ch not in seen:
+                stack.append(ch)
+    return seen
+
+
+# -- step 3: local search on the DAG objective -------------------------------------
+def _local_search(eg: EGraph, cm: CostModel, choice: Dict[int, ENode],
+                  roots: Sequence[int], deadline: float) -> Tuple[Dict[int, ENode], float]:
+    best = dict(choice)
+    best_cost = dag_cost_of(eg, cm, best, roots)
+    improved = True
+    while improved and time.perf_counter() < deadline:
+        improved = False
+        for cid in list(reachable(eg, best, roots)):
+            ec = eg.classes.get(eg.find(cid))
+            if ec is None:
+                continue
+            nodes = [eg.canonicalize(n) for n in ec.nodes]
+            if len(nodes) <= 1:
+                continue
+            current = best[eg.find(cid)]
+            for cand in nodes:
+                if cand == current:
+                    continue
+                trial = dict(best)
+                trial[eg.find(cid)] = cand
+                c = dag_cost_of(eg, cm, trial, roots)
+                if c < best_cost - 1e-9:
+                    best, best_cost = trial, c
+                    improved = True
+                    break
+            if time.perf_counter() > deadline:
+                break
+    return best, best_cost
+
+
+def extract_dag(eg: EGraph, roots, cost_model: Optional[CostModel] = None,
+                *, time_limit_s: float = 5.0,
+                local_search: bool = True) -> ExtractionResult:
+    """Extract a minimum-DAG-cost selection covering ``roots``."""
+    t0 = time.perf_counter()
+    cm = cost_model or CostModel()
+    if isinstance(roots, int):
+        roots = (roots,)
+    roots = tuple(eg.find(r) for r in roots)
+    tree_cost, tree_choice = _tree_costs(eg, cm)
+    for r in roots:
+        if r not in tree_choice:
+            raise ValueError(f"no extractable term for e-class {r}")
+    base_cost = dag_cost_of(eg, cm, tree_choice, roots)
+    choice, cost = tree_choice, base_cost
+    if local_search:
+        deadline = t0 + time_limit_s
+        choice, cost = _local_search(eg, cm, tree_choice, roots, deadline)
+    live = reachable(eg, choice, roots)
+    choice = {cid: n for cid, n in choice.items() if cid in live}
+    return ExtractionResult(
+        choice=choice, roots=roots, dag_cost=cost,
+        tree_cost=sum(tree_cost[r] for r in roots),
+        wall_s=time.perf_counter() - t0,
+        improved_by_search=base_cost - cost)
+
+
+# -- brute force for tests -----------------------------------------------------------
+def extract_exact(eg: EGraph, roots, cost_model: Optional[CostModel] = None,
+                  max_combos: int = 200_000) -> ExtractionResult:
+    """Enumerate all acyclic selections (tiny graphs only)."""
+    cm = cost_model or CostModel()
+    if isinstance(roots, int):
+        roots = (roots,)
+    roots = tuple(eg.find(r) for r in roots)
+    classes = eg.eclasses()
+    cids = sorted(classes.keys())
+    node_lists = [[eg.canonicalize(n) for n in classes[c].nodes] for c in cids]
+    n_combos = 1
+    for nl in node_lists:
+        n_combos *= len(nl)
+        if n_combos > max_combos:
+            raise ValueError(f"too many combos (> {max_combos})")
+    best_choice, best_cost = None, INF
+    for combo in itertools.product(*node_lists):
+        choice = dict(zip(cids, combo))
+        c = dag_cost_of(eg, cm, choice, roots)
+        if c < best_cost:
+            best_choice, best_cost = choice, c
+    assert best_choice is not None
+    live = reachable(eg, best_choice, roots)
+    best_choice = {c: n for c, n in best_choice.items() if c in live}
+    return ExtractionResult(choice=best_choice, roots=roots,
+                            dag_cost=best_cost, tree_cost=best_cost)

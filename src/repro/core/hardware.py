@@ -1,0 +1,47 @@
+"""TPU hardware constants used by cost models, roofline, and VMEM sizing.
+
+Target: TPU v5e (the assignment's roofline constants). A100 numbers are
+kept for the paper-comparison ablation in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float      # FLOP/s
+    hbm_bw: float               # bytes/s
+    ici_bw_per_link: float      # bytes/s per link
+    hbm_bytes: int              # HBM capacity
+    vmem_bytes: int             # usable VMEM per core (conservative)
+    ici_links: int = 4          # 2D torus: 4 links/chip
+
+
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,     # assignment constant
+    hbm_bw=819e9,               # assignment constant
+    ici_bw_per_link=50e9,       # assignment constant (~50 GB/s/link)
+    hbm_bytes=16 * 1024**3,
+    vmem_bytes=64 * 1024**2,    # keep kernels well under the 128 MiB VMEM
+)
+
+# For the paper's own A100-PCIE-40GB evaluation (Fig. 2/4), used by the
+# ablation benchmark to relate our cost-model deltas to the paper's GPU.
+A100_PCIE_40GB = ChipSpec(
+    name="a100_pcie_40gb",
+    peak_flops_bf16=312e12,
+    hbm_bw=1555e9,
+    ici_bw_per_link=64e9,       # NVLink3 per-direction aggregate/ring share
+    hbm_bytes=40 * 1024**3,
+    vmem_bytes=192 * 1024,      # SMEM+L1 per SM — for commentary only
+)
+
+DEFAULT_CHIP = TPU_V5E
+
+# Mesh axis conventions used across the framework.
+AXIS_POD = "pod"
+AXIS_DATA = "data"
+AXIS_MODEL = "model"

@@ -1,0 +1,170 @@
+"""Automatic saturation of arbitrary elementwise JAX functions.
+
+The paper wraps the C-compiler invocation and rewrites kernels with no
+user intervention. The JAX analogue stages a function to a jaxpr,
+converts the supported elementwise subset to a tile program, saturates
+it, and returns a drop-in replacement function — the framework applies
+this to user code via :func:`saturate_jax_fn` and to its own layers.
+
+Unsupported primitives raise :class:`BridgeUnsupported`; callers fall
+back to the original function (never a silent behavior change).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dsl import Expr, KernelProgram
+from .pipeline import SaturatedKernel, SaturatorConfig, saturate_program
+
+
+class BridgeUnsupported(ValueError):
+    pass
+
+
+# primitive name -> DSL op (unary)
+_UNARY = {
+    "neg": "neg", "exp": "exp", "log": "log", "tanh": "tanh",
+    "logistic": "sigmoid", "sqrt": "sqrt", "rsqrt": "rsqrt", "abs": "abs",
+    "floor": "floor",
+}
+_BINARY = {
+    "add": "add", "sub": "sub", "mul": "mul", "div": "div",
+    "max": "max", "min": "min", "pow": "pow", "rem": "mod",
+    "lt": "lt", "le": "le", "gt": "gt", "ge": "ge", "eq": "eq", "ne": "ne",
+}
+_PASSTHROUGH = ("convert_element_type", "stop_gradient", "copy")
+
+
+@dataclasses.dataclass
+class BridgedKernel:
+    fn: Callable
+    sk: SaturatedKernel
+    n_eqns: int
+    n_consts: int
+
+    def __call__(self, *args):
+        return self.fn(*args)
+
+
+def _to_term(prim_name: str, in_terms: List[tuple], eqn) -> tuple:
+    if prim_name in _UNARY:
+        return (_UNARY[prim_name], in_terms[0])
+    if prim_name in _BINARY:
+        return (_BINARY[prim_name], in_terms[0], in_terms[1])
+    if prim_name == "integer_pow":
+        y = eqn.params["y"]
+        if y == 2:
+            return ("square", in_terms[0])
+        if y == -1:
+            return ("recip", in_terms[0])
+        if y == 3:
+            return ("mul", in_terms[0], ("square", in_terms[0]))
+        return ("pow", in_terms[0], ("const", float(y)))
+    if prim_name == "select_n":
+        if len(in_terms) != 3:
+            raise BridgeUnsupported("select_n with >2 cases")
+        # lax.select_n(pred, on_false, on_true)
+        return ("select", in_terms[0], in_terms[2], in_terms[1])
+    if prim_name in _PASSTHROUGH:
+        return in_terms[0]
+    if prim_name == "broadcast_in_dim":
+        return in_terms[0]  # value-preserving under tile broadcasting
+    raise BridgeUnsupported(f"primitive {prim_name!r} not bridgeable")
+
+
+def saturate_jax_fn(fn: Callable, example_args: Sequence[Any],
+                    config: Optional[SaturatorConfig] = None,
+                    name: str = "bridged") -> BridgedKernel:
+    """Stage ``fn`` and return a saturated drop-in replacement.
+
+    ``fn`` must be elementwise over same-shaped array args (broadcast
+    scalars allowed) with a single array (or tuple) output.
+    """
+    cfg = config or SaturatorConfig()
+    closed = jax.make_jaxpr(fn)(*example_args)
+    jaxpr = closed.jaxpr
+
+    prog = KernelProgram(name)
+    terms: Dict[Any, tuple] = {}
+    for k, invar in enumerate(jaxpr.invars):
+        aval = invar.aval
+        if getattr(aval, "ndim", 0) == 0:
+            terms[invar] = prog.scalar(f"s{k}").t
+        else:
+            terms[invar] = prog.array_in(f"a{k}").load().t
+    for k, (cvar, cval) in enumerate(zip(jaxpr.constvars, closed.consts)):
+        arr = np.asarray(cval)
+        if arr.ndim == 0:
+            terms[cvar] = ("const", arr.item())
+        else:
+            raise BridgeUnsupported("non-scalar closure constants")
+
+    from jax.extend.core import Literal
+
+    def term_of(atom) -> tuple:
+        if isinstance(atom, Literal):
+            val = np.asarray(atom.val)
+            if val.ndim != 0:
+                raise BridgeUnsupported("array literal")
+            return ("const", val.item())
+        return terms[atom]
+
+    for eqn in jaxpr.eqns:
+        if len(eqn.outvars) != 1:
+            raise BridgeUnsupported(f"multi-output prim {eqn.primitive.name}")
+        in_terms = [term_of(a) for a in eqn.invars]
+        terms[eqn.outvars[0]] = _to_term(eqn.primitive.name, in_terms, eqn)
+
+    out_names = []
+    for k, outvar in enumerate(jaxpr.outvars):
+        oname = f"o{k}"
+        prog.array_out(oname)
+        prog.store(oname, Expr(term_of(outvar)))
+        out_names.append(oname)
+
+    sk = saturate_program(prog, cfg)
+
+    kernel_in = sk.kernel.in_arrays
+    kernel_scalars = sk.kernel.scalars
+    n_outs = len(jaxpr.outvars)
+
+    def wrapped(*args):
+        if len(args) != len(jaxpr.invars):
+            raise TypeError(f"expected {len(jaxpr.invars)} args")
+        arrays: Dict[str, Any] = {}
+        scalars: Dict[str, Any] = {}
+        tile = None
+        for k, (a, invar) in enumerate(zip(args, jaxpr.invars)):
+            if getattr(invar.aval, "ndim", 0) == 0:
+                scalars[f"s{k}"] = a
+            else:
+                arrays[f"a{k}"] = a
+                tile = a
+        call_args = []
+        for nm in kernel_in:
+            if nm in arrays:
+                call_args.append(arrays[nm])
+            else:  # out buffer
+                call_args.append(jnp.zeros(tile.shape, tile.dtype))
+        call_args += [scalars[s] for s in kernel_scalars]
+        out = sk.kernel.fn(*call_args)
+        return out[0] if n_outs == 1 else tuple(out)
+
+    return BridgedKernel(fn=wrapped, sk=sk, n_eqns=len(jaxpr.eqns),
+                         n_consts=len(closed.consts))
+
+
+def maybe_saturate(fn: Callable, example_args: Sequence[Any],
+                   config: Optional[SaturatorConfig] = None,
+                   name: str = "bridged") -> Tuple[Callable, Optional[BridgedKernel]]:
+    """Best-effort bridge: returns (replacement_or_original, info)."""
+    try:
+        bk = saturate_jax_fn(fn, example_args, config, name)
+        return bk.fn, bk
+    except BridgeUnsupported:
+        return fn, None

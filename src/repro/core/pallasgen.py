@@ -1,0 +1,273 @@
+"""Pallas/TPU code generation for saturated tile programs (paper §VI on TPU).
+
+A *tile program* is a straight-line :class:`KernelProgram` over whole-tile
+arrays (every load/store is un-indexed). The generator reuses the JAX
+scheduler in :mod:`repro.core.codegen` — including **bulk load** — but
+emits a Pallas kernel body where:
+
+* whole-tile loads become ``ref[...]`` VMEM reads. With ``bulk=True`` every
+  read is issued before the first compute op (sorted by array name), which
+  on TPU front-loads the HBM→VMEM traffic exactly like the paper's
+  bulk-load front-loads global-memory requests on the GPU;
+* whole-tile stores become ``out_ref[...] = value``;
+* the surrounding ``pl.pallas_call`` tiles the leading (row) dimension with
+  an explicit BlockSpec, keeping the working set inside VMEM and the lane
+  dimension a multiple of 128.
+
+The companion ``make_tile_op`` wrapper builds a jitted op that reshapes
+``(..., d)`` operands into rows, runs the kernel over a 1-D grid, and
+reshapes back. On CPU it runs in interpret mode (kernel body executed in
+Python) — bit-identical semantics, used by all tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .codegen import CodeGenerator, GenStats, _PRELUDE, _sanitize
+from .dsl import KernelProgram
+from .extract import ExtractionResult
+from .pipeline import SaturatorConfig, saturate_program
+from .ssa import LoopRegion, Region, SSAResult, StoreEffect
+from .hardware import DEFAULT_CHIP
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@dataclasses.dataclass
+class PallasKernel:
+    name: str
+    source: str
+    kernel_body: Callable      # fn(*in_refs, *out_refs) with scalars closed over
+    in_arrays: List[str]       # tile inputs (order of pallas_call operands)
+    weight_arrays: List[str]   # rank-deficient inputs broadcast over rows
+    out_arrays: List[str]
+    scalars: List[str]
+    stats: GenStats
+    bulk: bool
+
+
+class PallasGenerator(CodeGenerator):
+    """Emit a Pallas kernel body instead of a jnp function."""
+
+    def __init__(self, ssa: SSAResult, extraction: ExtractionResult, *,
+                 bulk: bool = True, fn_name: Optional[str] = None,
+                 reuse_temps: bool = True):
+        super().__init__(ssa, extraction, bulk=bulk, fn_name=fn_name,
+                         reuse_temps=reuse_temps)
+
+    def _check_tilable(self):
+        def walk(region: Region):
+            for item in region.items:
+                if isinstance(item, LoopRegion):
+                    raise ValueError(
+                        "Pallas tile programs must be straight-line; "
+                        f"kernel {self.ssa.prog.name!r} has a for-loop "
+                        "(use the JAX generator or lift the loop to the grid)")
+                if item.index_cids:
+                    raise ValueError(
+                        "Pallas tile programs use whole-tile stores; "
+                        f"kernel {self.ssa.prog.name!r} stores with indices")
+        walk(self.ssa.region)
+        for cid, n in list(self.choice.items()):
+            if n.op == "load" and len(n.children) > 1:
+                raise ValueError("Pallas tile programs use whole-tile loads")
+            if n.op == "call":
+                raise ValueError("calls not supported in Pallas tile programs")
+
+    # loads read refs --------------------------------------------------------
+    def emit_value(self, cid: int, lines: List[str], indent: str) -> str:
+        cid = self.eg.find(cid)
+        memo_ok = (self.reuse_temps is True
+                   or (self.reuse_temps in (False, "lets")
+                       and cid in self._let_set))
+        bound = self.scope.get(cid, memo=memo_ok)
+        if bound is not None:
+            return bound
+        n = self.node(cid)
+        if n.op == "load":
+            arr = self.emit_value(n.children[0], lines, indent)
+            name = self._fresh()
+            self.stats.n_temps += 1
+            self.stats.n_loads += 1
+            self.stats.instruction_mix["load"] = \
+                self.stats.instruction_mix.get("load", 0) + 1
+            lines.append(f"{indent}{name} = {arr}[...]")
+            self.scope.bind(cid, name)
+            return name
+        return super().emit_value(cid, lines, indent)
+
+    def _emit_store(self, eff: StoreEffect, lines: List[str], indent: str):
+        val = self.emit_value(eff.value_cid, lines, indent)
+        dst_ref = f"{eff.array}_oref"
+        if eff.pred_cid is not None:
+            pred = self.emit_value(eff.pred_cid, lines, indent)
+            src = self.scope.get_sym(eff.version_in)
+            old = f"{src}[...]" if src else f"{dst_ref}[...]"
+            val = f"jnp.where({pred}, {val}, {old})"
+        lines.append(f"{indent}{dst_ref}[...] = {val}")
+        # later loads of this array read the ref we just wrote
+        self.scope.bind_sym(eff.version_out, dst_ref)
+        self.stats.n_stores += 1
+
+    def generate_pallas(self) -> PallasKernel:
+        self._check_tilable()
+        prog = self.ssa.prog
+        in_arrays = [a.name for a in prog.arrays.values()
+                     if a.role in ("in", "inout")]
+        out_arrays = [a.name for a in prog.arrays.values()
+                      if a.role in ("out", "inout")]
+        scalars = list(prog.scalars)
+        ref_params = ([f"{n}_ref" for n in in_arrays]
+                      + [f"{n}_oref" for n in out_arrays])
+        lines: List[str] = []
+        indent = "    "
+        for a in in_arrays:
+            self.scope.bind_sym(f"{a}@0", f"{a}_ref")
+        for a in out_arrays:
+            self.scope.bind_sym(f"{a}@undef", f"{a}_oref")
+        if self.bulk:
+            self._collect_load_regions()
+        self.emit_region(self.ssa.region, (), lines, indent)
+        body = "\n".join(lines) if lines else "    pass"
+        sig = ", ".join(ref_params + scalars)
+        src = (f"{_PRELUDE}\n"
+               f"def {self.fn_name}_body({sig}):\n{body}\n")
+        glb: Dict[str, Any] = {}
+        exec(compile(src, f"<pallas:{self.fn_name}>", "exec"), glb)
+        return PallasKernel(
+            name=self.fn_name, source=src, kernel_body=glb[f"{self.fn_name}_body"],
+            in_arrays=in_arrays, weight_arrays=[], out_arrays=out_arrays,
+            scalars=scalars, stats=self.stats, bulk=self.bulk)
+
+
+@dataclasses.dataclass
+class TileOp:
+    """Jitted op wrapping a saturated Pallas kernel over a row grid."""
+    name: str
+    pk: PallasKernel
+    jax_ref: Callable          # pure-jnp oracle built from the same program
+    row_block: int
+    source: str
+
+    def __call__(self, *arrays, interpret: Optional[bool] = None, **scalars):
+        return self.apply(*arrays, interpret=interpret, **scalars)
+
+    def apply(self, *arrays, interpret: Optional[bool] = None, **scalars):
+        interpret = _on_cpu() if interpret is None else interpret
+        return _apply_tile_op(self, arrays, tuple(sorted(scalars.items())),
+                              interpret)
+
+
+def _apply_tile_op(op: TileOp, arrays, scalar_items, interpret: bool):
+    pk = op.pk
+    scalars = dict(scalar_items)
+    lead = arrays[0]
+    d = lead.shape[-1]
+    rows = math.prod(lead.shape[:-1]) if lead.ndim > 1 else 1
+    row_block = min(op.row_block, rows)
+    # pad rows to a multiple of the block
+    padded = _ceil_to(rows, row_block)
+    ins2d = []
+    for name, a in zip(pk.in_arrays, arrays):
+        if a.ndim >= 2 and math.prod(a.shape[:-1]) == rows:
+            a2 = a.reshape(rows, a.shape[-1])
+            if padded != rows:
+                a2 = jnp.pad(a2, ((0, padded - rows), (0, 0)))
+            ins2d.append(("row", a2))
+        else:  # broadcast weight (g, b, ...) — same block every row-tile
+            ins2d.append(("bcast", a.reshape(1, -1)))
+    grid = (padded // row_block,)
+
+    def body(*refs):
+        pk.kernel_body(*refs, **scalars)
+
+    in_specs = []
+    for kind, a2 in ins2d:
+        if kind == "row":
+            in_specs.append(pl.BlockSpec((row_block, a2.shape[-1]),
+                                         lambda i: (i, 0)))
+        else:
+            in_specs.append(pl.BlockSpec((1, a2.shape[-1]), lambda i: (0, 0)))
+    out_specs = [pl.BlockSpec((row_block, d), lambda i: (i, 0))
+                 for _ in pk.out_arrays]
+    out_shapes = [jax.ShapeDtypeStruct((padded, d), lead.dtype)
+                  for _ in pk.out_arrays]
+    call = pl.pallas_call(
+        body, grid=grid, in_specs=in_specs,
+        out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
+        out_shape=out_shapes if len(out_shapes) > 1 else out_shapes[0],
+        interpret=interpret)
+    outs = call(*[a2 for _, a2 in ins2d])
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    outs = [o[:rows].reshape(lead.shape[:-1] + (d,)) for o in outs]
+    return outs[0] if len(outs) == 1 else tuple(outs)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def vmem_estimate(row_block: int, d: int, n_tiles: int,
+                  dtype_bytes: int = 4) -> int:
+    """Conservative VMEM working-set estimate for a tile kernel."""
+    return row_block * d * dtype_bytes * n_tiles
+
+
+def pick_row_block(d: int, n_tiles: int, dtype_bytes: int = 4,
+                   chip=DEFAULT_CHIP) -> int:
+    """Largest row block (multiple of 8, ≤512) fitting the VMEM budget.
+
+    8 sublanes × 128 lanes is the fp32 native tile; we keep ~4x headroom
+    for temporaries the compiler materializes (the TPU analogue of the
+    paper's register-pressure concern, §VIII)."""
+    budget = chip.vmem_bytes // 4
+    blk = 512
+    while blk > 8 and vmem_estimate(blk, d, n_tiles, dtype_bytes) > budget:
+        blk //= 2
+    return max(blk, 8)
+
+
+def make_tile_op(prog: KernelProgram,
+                 config: Optional[SaturatorConfig] = None,
+                 row_block: Optional[int] = None) -> TileOp:
+    """Saturate ``prog`` and build both the Pallas op and its jnp oracle."""
+    cfg = config or SaturatorConfig(mode="accsat", cost_model="tpu_v5e")
+    sk = saturate_program(prog, cfg)
+    pgen = PallasGenerator(sk.ssa, sk.extraction, bulk=cfg.use_bulk,
+                           reuse_temps=cfg.use_cse)
+    pk = pgen.generate_pallas()
+
+    jax_fn = sk.kernel.fn
+    in_names = sk.kernel.in_arrays
+    scalar_names = sk.kernel.scalars
+
+    def jax_ref(*arrays, **scalars):
+        args = list(arrays) + [scalars[s] for s in scalar_names]
+        # out arrays in the jnp path need explicit buffers
+        full_args = []
+        ai = iter(arrays)
+        for name in in_names:
+            spec = prog.arrays[name]
+            if spec.role == "out":
+                full_args.append(jnp.zeros_like(arrays[0]))
+            else:
+                full_args.append(next(ai))
+        full_args += [scalars[s] for s in scalar_names]
+        out = jax_fn(*full_args)
+        return out[0] if len(out) == 1 else out
+
+    n_tiles = len(pk.in_arrays) + len(pk.out_arrays) + 2
+    rb = row_block or pick_row_block(256, n_tiles)
+    return TileOp(name=prog.name, pk=pk, jax_ref=jax_ref, row_block=rb,
+                  source=pk.source)

@@ -1,0 +1,161 @@
+"""End-to-end saturator pipeline (paper Fig. 1) with the four evaluated
+configurations:
+
+  =========  ====  ============  =========
+  mode       CSE   saturation    bulk load
+  =========  ====  ============  =========
+  baseline    no        no           no      (original code, §VIII)
+  cse         yes       no           no
+  cse_sat     yes    Table I        no
+  cse_bulk    yes       no          yes
+  accsat      yes    Table I       yes      (default, = ACCSAT)
+  =========  ====  ============  =========
+
+`saturate_program` runs: DSL → SSA+φ → e-graph → equality saturation →
+CSE-aware extraction → codegen (temp vars + bulk load) → callable JAX
+kernel. Limits default to the paper's §VII values.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+from .codegen import CodeGenerator, GeneratedKernel
+from .cost import CostModel, TPUCostModel
+from .dsl import KernelProgram
+from .egraph import EGraph
+from .extract import ExtractionResult, extract_dag
+from .rules import (EXTENDED_RULES, PAPER_RULES, TPU_RULES, Rule,
+                    SaturationReport, run_rules)
+from .ssa import SSAResult, build_ssa
+
+MODES = ("baseline", "cse", "cse_sat", "cse_bulk", "accsat")
+
+
+@dataclasses.dataclass
+class SaturatorConfig:
+    mode: str = "accsat"
+    # paper §VII limits: 10k e-nodes, 10 iters, 10 s saturation, 30 s extract
+    iter_limit: int = 10
+    node_limit: int = 10_000
+    time_limit_s: float = 10.0
+    extract_time_limit_s: float = 30.0
+    cost_model: str = "paper"      # 'paper' | 'tpu_v5e'
+    extended_rules: bool = False   # §V-A restricted set (off, as in paper)
+    tpu_rules: bool = False        # beyond-paper strength reduction
+    local_search: bool = True      # DAG-cost refinement (ILP stand-in)
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {self.mode}")
+
+    @property
+    def use_sat(self) -> bool:
+        return self.mode in ("cse_sat", "accsat")
+
+    @property
+    def use_bulk(self) -> bool:
+        return self.mode in ("cse_bulk", "accsat")
+
+    @property
+    def use_cse(self) -> bool:
+        return self.mode != "baseline"
+
+    def rules(self) -> list:
+        rules = list(PAPER_RULES)
+        if self.extended_rules:
+            rules += EXTENDED_RULES
+        if self.tpu_rules:
+            rules += [r for r in TPU_RULES if "NOP" not in r.name]
+        return rules
+
+    def make_cost_model(self) -> CostModel:
+        return TPUCostModel() if self.cost_model == "tpu_v5e" else CostModel()
+
+
+@dataclasses.dataclass
+class SaturatedKernel:
+    """Everything the pipeline produced for one kernel."""
+    kernel: GeneratedKernel
+    ssa: SSAResult
+    extraction: ExtractionResult
+    saturation: Optional[SaturationReport]
+    config: SaturatorConfig
+    ssa_wall_s: float = 0.0
+    codegen_wall_s: float = 0.0
+
+    @property
+    def fn(self) -> Callable:
+        return self.kernel.fn
+
+    @property
+    def source(self) -> str:
+        return self.kernel.source
+
+    def __call__(self, *a, **k):
+        return self.kernel.fn(*a, **k)
+
+    def report(self) -> Dict[str, Any]:
+        s = self.kernel.stats
+        return {
+            "mode": self.config.mode,
+            "dag_cost": self.extraction.dag_cost,
+            "tree_cost": self.extraction.tree_cost,
+            "n_temps": s.n_temps,
+            "n_loads": s.n_loads,
+            "n_stores": s.n_stores,
+            "n_fma": s.n_fma,
+            "n_ops": s.n_ops,
+            "loads_before_compute": s.loads_before_compute,
+            "sat_iterations": self.saturation.iterations
+            if self.saturation else 0,
+            "sat_nodes": self.saturation.n_nodes if self.saturation else 0,
+            "sat_stop": self.saturation.stop_reason
+            if self.saturation else "disabled",
+            "ssa_ms": self.ssa_wall_s * 1e3,
+            "sat_s": self.saturation.wall_s if self.saturation else 0.0,
+            "extract_s": self.extraction.wall_s,
+            "codegen_ms": self.codegen_wall_s * 1e3,
+        }
+
+
+def saturate_program(prog: KernelProgram,
+                     config: Optional[SaturatorConfig] = None,
+                     extra_fns: Optional[Dict[str, Callable]] = None
+                     ) -> SaturatedKernel:
+    cfg = config or SaturatorConfig()
+    t0 = time.perf_counter()
+    ssa = build_ssa(prog)
+    ssa_wall = time.perf_counter() - t0
+    sat_report = None
+    if cfg.use_sat:
+        sat_report = run_rules(ssa.egraph, cfg.rules(),
+                               iter_limit=cfg.iter_limit,
+                               node_limit=cfg.node_limit,
+                               time_limit_s=cfg.time_limit_s)
+    roots = ssa.roots()
+    extraction = extract_dag(
+        ssa.egraph, tuple(roots) if roots else (),
+        cost_model=cfg.make_cost_model(),
+        time_limit_s=cfg.extract_time_limit_s,
+        local_search=cfg.local_search and cfg.use_cse)
+    t1 = time.perf_counter()
+    gen = CodeGenerator(ssa, extraction, bulk=cfg.use_bulk,
+                        extra_fns=extra_fns,
+                        reuse_temps=cfg.use_cse).generate()
+    codegen_wall = time.perf_counter() - t1
+    return SaturatedKernel(kernel=gen, ssa=ssa, extraction=extraction,
+                           saturation=sat_report, config=cfg,
+                           ssa_wall_s=ssa_wall, codegen_wall_s=codegen_wall)
+
+
+def saturate_all_modes(prog: KernelProgram, base: Optional[SaturatorConfig]
+                       = None, extra_fns=None) -> Dict[str, SaturatedKernel]:
+    """All four paper configurations + baseline, for ablation benchmarks."""
+    base = base or SaturatorConfig()
+    out = {}
+    for mode in MODES:
+        cfg = dataclasses.replace(base, mode=mode)
+        out[mode] = saturate_program(prog, cfg, extra_fns=extra_fns)
+    return out

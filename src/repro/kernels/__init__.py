@@ -1,0 +1,13 @@
+# Pallas TPU kernels for the compute hot-spots the framework saturates:
+# - saturated elementwise tile programs (rmsnorm/swiglu/rotary/adamw/...)
+#   generated from the e-graph pipeline with bulk-load VMEM scheduling;
+# - flash attention (online softmax, causal skip, GQA);
+# - Mamba2 SSD chunked scan.
+# ops.py = dispatching wrappers; ref.py = pure-jnp oracles.
+from . import ops, ref
+from .flash_attention import decode_attention, flash_attention
+from .ssd_scan import ssd_decode_step, ssd_scan, ssd_scan_jnp
+from .tile_programs import PROGRAMS, get_tile_op
+
+__all__ = ["ops", "ref", "flash_attention", "decode_attention", "ssd_scan",
+           "ssd_scan_jnp", "ssd_decode_step", "PROGRAMS", "get_tile_op"]

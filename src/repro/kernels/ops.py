@@ -1,0 +1,157 @@
+"""Public kernel API — jitted wrappers dispatching per backend.
+
+Every op has three implementations:
+  * ``pallas``  — the Pallas TPU kernel (interpret-mode on CPU): saturated
+                  tile programs via :mod:`repro.core.pallasgen`, plus the
+                  handwritten flash-attention / SSD kernels;
+  * ``jnp``     — the *saturated generated JAX code* (the paper's optimized
+                  output, CPU-fast, used inside jitted model steps);
+  * ``ref``     — the independent oracle in :mod:`repro.kernels.ref`.
+
+Default: pallas on TPU, jnp elsewhere. ``set_impl(...)`` overrides
+globally (tests sweep all three).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .flash_attention import decode_attention, flash_attention
+from .ssd_scan import ssd_decode_step, ssd_scan, ssd_scan_jnp
+from .tile_programs import get_tile_op
+
+_IMPL: Optional[str] = None  # None = auto
+
+
+def set_impl(impl: Optional[str]):
+    """impl in {None(auto), 'pallas', 'jnp', 'ref'}."""
+    global _IMPL
+    assert impl in (None, "auto", "pallas", "jnp", "ref")
+    _IMPL = None if impl == "auto" else impl
+
+
+def current_impl() -> str:
+    if _IMPL is not None:
+        return _IMPL
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _tile(name: str, *arrays, **scalars):
+    impl = current_impl()
+    if impl == "ref":
+        return getattr(_ref, f"{name}_ref")(*arrays, **scalars)
+    op = get_tile_op(name)
+    if impl == "pallas":
+        return op.apply(*arrays, **scalars)
+    return op.jax_ref(*arrays, **scalars)
+
+
+# -- saturated tile ops ---------------------------------------------------------
+def rmsnorm(x, g, eps=1e-6):
+    return _tile("rmsnorm", x, g, eps=eps)
+
+
+def rmsnorm_gated(x, z, g, eps=1e-6):
+    return _tile("rmsnorm_gated", x, z, g, eps=eps)
+
+
+def layernorm(x, g, b, eps=1e-6):
+    return _tile("layernorm", x, g, b, eps=eps)
+
+
+def swiglu(a, b):
+    return _tile("swiglu", a, b)
+
+
+def gelu(a):
+    if current_impl() == "ref":
+        return _ref.gelu_ref(a)
+    op = get_tile_op("gelu")
+    return op.apply(a) if current_impl() == "pallas" else op.jax_ref(a)
+
+
+def rotary(q, cos, sin):
+    """q:(..., d); cos/sin broadcastable to q. Tile rows = flattened lead."""
+    impl = current_impl()
+    if impl == "ref":
+        return _ref.rotary_ref(q, cos, sin)
+    op = get_tile_op("rotary")
+    cosb = jnp.broadcast_to(cos, q.shape)
+    sinb = jnp.broadcast_to(sin, q.shape)
+    if impl == "pallas":
+        return op.apply(q, cosb, sinb)
+    return op.jax_ref(q, cosb, sinb)
+
+
+def residual_scale(x, y, alpha=1.0):
+    return _tile("residual_scale", x, y, alpha=alpha)
+
+
+def softmax(x):
+    return _tile("softmax", x)
+
+
+def moe_router_probs(logits):
+    impl = current_impl()
+    if impl == "ref":
+        return _ref.softmax_ref(logits)
+    op = get_tile_op("moe_router")
+    return op.apply(logits) if impl == "pallas" else op.jax_ref(logits)
+
+
+def adamw_update(param, grad, m, v, *, lr, b1, b2, eps, wd,
+                 inv_bc1, inv_bc2):
+    """Returns (m_new, v_new, param_new) — saturated fused update."""
+    impl = current_impl()
+    if impl == "ref":
+        return _ref.adamw_ref(param, grad, m, v, lr=lr, b1=b1, b2=b2,
+                              eps=eps, wd=wd, inv_bc1=inv_bc1,
+                              inv_bc2=inv_bc2)
+    op = get_tile_op("adamw")
+    kw = dict(lr=lr, b1=b1, b2=b2, eps=eps, wd=wd,
+              inv_bc1=inv_bc1, inv_bc2=inv_bc2)
+    if impl == "pallas":
+        return op.apply(param, grad, m, v, **kw)
+    return op.jax_ref(param, grad, m, v, **kw)
+
+
+def ssd_gate(dt_raw, a_log, bias=0.0):
+    """Returns (dt, decay) with shared softplus. a_log broadcast to dt_raw."""
+    impl = current_impl()
+    if impl == "ref":
+        return _ref.ssd_gate_ref(dt_raw, a_log, bias=bias)
+    op = get_tile_op("ssd_gate")
+    a_b = jnp.broadcast_to(a_log, dt_raw.shape)
+    if impl == "pallas":
+        return op.apply(dt_raw, a_b, bias=bias)
+    return op.jax_ref(dt_raw, a_b, bias=bias)
+
+
+# -- structured kernels -----------------------------------------------------------
+def attention(q, k, v, *, causal=True, scale=None, q_block=128,
+              kv_block=128):
+    impl = current_impl()
+    if impl == "pallas":
+        return flash_attention(q, k, v, causal=causal, scale=scale,
+                               q_block=q_block, kv_block=kv_block)
+    return _ref.attention_ref(q, k, v, causal=causal, scale=scale)
+
+
+def attention_decode(q, k_cache, v_cache, *, scale=None):
+    return decode_attention(q, k_cache, v_cache, scale=scale)
+
+
+def ssd(x, dt, a_log, b_mat, c_mat, d_skip, *, chunk=128):
+    impl = current_impl()
+    if impl == "pallas":
+        return ssd_scan(x, dt, a_log, b_mat, c_mat, d_skip, chunk=chunk)
+    if impl == "ref":
+        return _ref.ssd_ref(x, dt, a_log, b_mat, c_mat, d_skip)
+    return ssd_scan_jnp(x, dt, a_log, b_mat, c_mat, d_skip, chunk=chunk)
+
+
+def ssd_decode(h, x_t, dt_t, a_log, b_t, c_t, d_skip):
+    return ssd_decode_step(h, x_t, dt_t, a_log, b_t, c_t, d_skip)

@@ -1,0 +1,127 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth for tests (``assert_allclose`` against both the
+saturated JAX codegen and the Pallas kernels in interpret mode) and the
+CPU fallback path for model execution.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def rmsnorm_ref(x, g, eps=1e-6):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * lax.rsqrt(var + eps) * g
+
+
+def rmsnorm_gated_ref(x, z, g, eps=1e-6):
+    xg = x * (z * lax.logistic(z))
+    var = jnp.mean(jnp.square(xg), axis=-1, keepdims=True)
+    return xg * lax.rsqrt(var + eps) * g
+
+
+def layernorm_ref(x, g, b, eps=1e-6):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mu
+    var = jnp.mean(jnp.square(xc), axis=-1, keepdims=True)
+    return xc * lax.rsqrt(var + eps) * g + b
+
+
+def swiglu_ref(a, b):
+    return a * lax.logistic(a) * b
+
+
+def gelu_ref(a):
+    return 0.5 * a * (1.0 + jnp.tanh(
+        0.7978845608028654 * (a + 0.044715 * a ** 3)))
+
+
+def rotate_half_ref(x):
+    h = x.shape[-1] // 2
+    return jnp.concatenate([-x[..., h:], x[..., :h]], axis=-1)
+
+
+def rotary_ref(q, cos, sin):
+    return q * cos + rotate_half_ref(q) * sin
+
+
+def residual_scale_ref(x, y, alpha=1.0):
+    return x + alpha * y
+
+
+def softmax_ref(x):
+    e = jnp.exp(x - jnp.max(x, axis=-1, keepdims=True))
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def adamw_ref(param, grad, m, v, *, lr, b1, b2, eps, wd, inv_bc1, inv_bc2):
+    m_new = b1 * m + (1.0 - b1) * grad
+    v_new = b2 * v + (1.0 - b2) * grad * grad
+    mhat = m_new * inv_bc1
+    vhat = v_new * inv_bc2
+    update = mhat / (jnp.sqrt(vhat) + eps) + wd * param
+    return m_new, v_new, param - lr * update
+
+
+def sgd_momentum_ref(param, grad, m, *, lr, mu):
+    m_new = mu * m + grad
+    return m_new, param - lr * m_new
+
+
+def ssd_gate_ref(dt_raw, a_log, *, bias=0.0):
+    dt = jax.nn.softplus(dt_raw + bias)
+    decay = jnp.exp(dt * (-jnp.exp(a_log)))
+    return dt, decay
+
+
+def l2_clip_ref(g, *, norm, max_norm, eps=1e-9):
+    scale = jnp.minimum(1.0, max_norm / (norm + eps))
+    return g * scale
+
+
+def attention_ref(q, k, v, *, causal=True, scale=None):
+    """Naive attention oracle. q:(B,H,S,D) k/v:(B,KH,S,D); GQA by repeat."""
+    B, H, S, D = q.shape
+    KH = k.shape[1]
+    if KH != H:
+        rep = H // KH
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = (D ** -0.5) if scale is None else scale
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(q.dtype), v)
+
+
+def ssd_ref(x, dt, a_log, b_mat, c_mat, d_skip):
+    """Mamba2 SSD oracle: sequential recurrence via lax.scan.
+
+    x:(B,S,H,P) dt:(B,S,H) a_log:(H,) b_mat/c_mat:(B,S,N) d_skip:(H,)
+    h_t = exp(dt*A)·h_{t-1} + dt·(B_t ⊗ x_t);  y_t = C_t·h_t + D·x_t
+    """
+    Bsz, S, H, P = x.shape
+    N = b_mat.shape[-1]
+    A = -jnp.exp(a_log)  # (H,)
+
+    def step(h, inputs):
+        xt, dtt, bt, ct = inputs         # (B,H,P) (B,H) (B,N) (B,N)
+        decay = jnp.exp(dtt * A)         # (B,H)
+        dbx = jnp.einsum("bn,bh,bhp->bhnp", bt, dtt, xt)
+        h = decay[..., None, None] * h + dbx
+        y = jnp.einsum("bn,bhnp->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(b_mat, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(c_mat, 1, 0).astype(jnp.float32))
+    _, ys = lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)           # (B,S,H,P)
+    return (y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+            ).astype(x.dtype)

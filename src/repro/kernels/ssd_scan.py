@@ -1,0 +1,182 @@
+"""Mamba2 SSD (state-space duality) chunked scan kernel in Pallas.
+
+Implements the chunked SSD algorithm [Dao & Gu, arXiv:2405.21060] on TPU:
+the sequence is split into chunks; within a chunk the output is computed
+as a masked attention-like matmul (MXU-friendly), while the recurrent
+state (N × P per head) is carried across chunks in VMEM scratch.
+
+Grid: (batch*heads, n_chunks) with chunks innermost so the state scratch
+carries. Per the bulk-load principle, all tile reads of a chunk step are
+issued before the first matmul.
+
+Validated against the sequential-recurrence oracle
+:func:`repro.kernels.ref.ssd_ref` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, o_ref, h_scr, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    # ---- bulk load: every VMEM read up front --------------------------------
+    x = x_ref[0, ...].astype(jnp.float32)        # (L, P)
+    dt = dt_ref[0, ...].astype(jnp.float32)      # (L, 128) replicated
+    a_log = a_ref[0, ...]                        # (1, 128) replicated
+    b = b_ref[0, ...].astype(jnp.float32)        # (L, N)
+    c = c_ref[0, ...].astype(jnp.float32)        # (L, N)
+    d_skip = d_ref[0, ...]                       # (1, 128) replicated
+    h_prev = h_scr[...]                          # (N, P)
+
+    dt1 = dt[:, :1]                              # (L, 1)
+    a = -jnp.exp(a_log[0, 0])                    # scalar A for this head
+    # cumulative log-decay within the chunk: s_t = sum_{u<=t} dt_u * A
+    seg = jnp.cumsum(dt1 * a, axis=0)            # (L, 1), negative
+    # intra-chunk: y[t] = sum_{s<=t} C_t·B_s exp(seg_t - seg_s) dt_s x_s
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    li = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay_mat = jnp.exp(seg - seg.T)             # exp(seg_t - seg_s)
+    mask = li >= lj
+    scores = jnp.where(mask, cb * decay_mat, 0.0)
+    dx = dt1 * x                                 # (L, P)
+    y_intra = jax.lax.dot_general(scores, dx, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    # inter-chunk: y_t += exp(seg_t) * C_t · h_prev
+    ch = jax.lax.dot_general(c, h_prev, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, P)
+    y = y_intra + jnp.exp(seg) * ch
+    # state update: h = exp(seg_L) h_prev + sum_t exp(seg_L - seg_t) B_t dx_t
+    total = seg[-1:, :]                          # (1, 1)
+    w = jnp.exp(total - seg)                     # (L, 1)
+    bh = jax.lax.dot_general(b * w, dx, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (N, P)
+    h_scr[...] = jnp.exp(total[0, 0]) * h_prev + bh
+    o_ref[0, ...] = (y + d_skip[0, 0] * x).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a_log, b_mat, c_mat, d_skip, *, chunk: int = 128,
+             interpret: Optional[bool] = None):
+    """Chunked SSD. x:(B,S,H,P) dt:(B,S,H) a_log,d_skip:(H,)
+    b_mat,c_mat:(B,S,N) → y:(B,S,H,P)."""
+    B, S, H, P = x.shape
+    N = b_mat.shape[-1]
+    interpret = (jax.default_backend() == "cpu") if interpret is None \
+        else interpret
+    chunk = min(chunk, S)
+    assert S % chunk == 0, f"S={S} not a multiple of chunk={chunk}"
+    n_chunks = S // chunk
+
+    # layouts: (B*H, S, ·) per-head streams; replicate per-head scalars to
+    # a 128-lane row so the TPU layout is legal.
+    xh = jnp.moveaxis(x, 2, 1).reshape(B * H, S, P)
+    dth = jnp.moveaxis(dt, 2, 1).reshape(B * H, S, 1)
+    dth = jnp.broadcast_to(dth, (B * H, S, 128))
+    a_rows = jnp.broadcast_to(
+        jnp.tile(a_log.astype(jnp.float32), B)[:, None, None], (B * H, 1, 128))
+    d_rows = jnp.broadcast_to(
+        jnp.tile(d_skip.astype(jnp.float32), B)[:, None, None], (B * H, 1, 128))
+    b_h = jnp.broadcast_to(b_mat[:, None], (B, H, S, N)).reshape(B * H, S, N)
+    c_h = jnp.broadcast_to(c_mat[:, None], (B, H, S, N)).reshape(B * H, S, N)
+
+    grid = (B * H, n_chunks)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh_, ci: (bh_, ci, 0)),
+            pl.BlockSpec((1, chunk, 128), lambda bh_, ci: (bh_, ci, 0)),
+            pl.BlockSpec((1, 1, 128), lambda bh_, ci: (bh_, 0, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh_, ci: (bh_, ci, 0)),
+            pl.BlockSpec((1, chunk, N), lambda bh_, ci: (bh_, ci, 0)),
+            pl.BlockSpec((1, 1, 128), lambda bh_, ci: (bh_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda bh_, ci: (bh_, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xh, dth, a_rows, b_h, c_h, d_rows)
+    return jnp.moveaxis(out.reshape(B, H, S, P), 1, 2)
+
+
+def ssd_scan_jnp(x, dt, a_log, b_mat, c_mat, d_skip, *, chunk: int = 128,
+                 return_state: bool = False):
+    """Chunked SSD in pure jnp (same math, lax.scan over chunks) — the
+    fast CPU path for model execution; oracle remains ssd_ref.
+    With ``return_state``, also returns the final (B,H,N,P) state (used by
+    prefill to seed decode)."""
+    B, S, H, P = x.shape
+    N = b_mat.shape[-1]
+    chunk = min(chunk, S)
+    S0 = S
+    if S % chunk:
+        # pad to a chunk multiple with dt=0 steps (decay=1, no input:
+        # state and causal outputs are unchanged), slice back at the end
+        pad = chunk - S % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    n_chunks = S // chunk
+    a = -jnp.exp(a_log.astype(jnp.float32))                  # (H,)
+
+    xc = x.reshape(B, n_chunks, chunk, H, P).astype(jnp.float32)
+    dtc = dt.reshape(B, n_chunks, chunk, H).astype(jnp.float32)
+    bc = b_mat.reshape(B, n_chunks, chunk, N).astype(jnp.float32)
+    cc = c_mat.reshape(B, n_chunks, chunk, N).astype(jnp.float32)
+
+    def step(h, inp):
+        xk, dtk, bk, ck = inp            # (B,L,H,P) (B,L,H) (B,L,N) (B,L,N)
+        seg = jnp.cumsum(dtk * a, axis=1)             # (B,L,H)
+        cb = jnp.einsum("bln,bmn->blm", ck, bk)       # (B,L,L)
+        decay = jnp.exp(seg[:, :, None, :] - seg[:, None, :, :])  # (B,L,L,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        scores = jnp.where(mask[None, :, :, None],
+                           cb[..., None] * decay, 0.0)  # (B,L,L,H)
+        dx = dtk[..., None] * xk                       # (B,L,H,P)
+        y_intra = jnp.einsum("blmh,bmhp->blhp", scores, dx)
+        chp = jnp.einsum("bln,bhnp->blhp", ck, h)
+        y = y_intra + jnp.exp(seg)[..., None] * chp
+        total = seg[:, -1:, :]                         # (B,1,H)
+        w = jnp.exp(total - seg)                       # (B,L,H)
+        bh_ = jnp.einsum("bln,blh,blhp->bhnp", bk, w * dtk, xk)
+        h = jnp.exp(total[:, 0, :])[:, :, None, None] * h + bh_
+        return h, y
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(dtc, 1, 0),
+          jnp.moveaxis(bc, 1, 0), jnp.moveaxis(cc, 1, 0))
+    h_final, ys = lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    out = (y + x.astype(jnp.float32) * d_skip[None, None, :, None]
+           ).astype(x.dtype)[:, :S0]
+    if return_state:
+        return out, h_final
+    return out
+
+
+def ssd_decode_step(h, x_t, dt_t, a_log, b_t, c_t, d_skip):
+    """One-token recurrent update for serving. h:(B,H,N,P) x_t:(B,H,P)
+    dt_t:(B,H) b_t/c_t:(B,N) → (h', y_t:(B,H,P))."""
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    decay = jnp.exp(dt_t * a)                          # (B,H)
+    dbx = jnp.einsum("bn,bh,bhp->bhnp", b_t, dt_t, x_t)
+    h = decay[..., None, None] * h + dbx
+    y = jnp.einsum("bn,bhnp->bhp", c_t, h) + d_skip[None, :, None] * x_t
+    return h, y

@@ -1,0 +1,3 @@
+# Launchers: mesh construction, multi-pod dry-run, training and serving
+# drivers. dryrun.py must be executed as a module entry (it sets XLA_FLAGS
+# before importing jax).

@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this
+  * builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  * constructs abstract inputs (ShapeDtypeStruct — no allocation),
+  * jits the right step (train_step / prefill / serve_step) with explicit
+    in_shardings from repro.parallel.sharding,
+  * ``.lower().compile()``s it,
+  * prints memory_analysis() / cost_analysis() and derives the three-term
+    roofline (repro.roofline), writing JSON to experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch minitron-4b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--single-pod]
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, ARCHS, SHAPES, applicable, get_config)
+from repro.launch.mesh import make_production_mesh
+from repro.launch import steps as S
+from repro.models import get_model
+from repro.parallel import (batch_specs, cache_specs, ctx, opt_state_specs,
+                            param_specs, to_named)
+from repro.roofline.report import model_flops_for, roofline_from_compiled
+
+OUT_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True, overrides: dict = None) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    ok, why = applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": why}
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    tp = mesh.shape.get("model", 1)
+    if shape.kind == "train":
+        # train cells shard the residual stream along S (Megatron SP):
+        # saved activations divide by tp, so accumulation stays small
+        cfg = dataclasses.replace(cfg, seq_shard=True)
+    if shape.kind == "decode" and cfg.param_count() > 100e9:
+        # 100B+ decode carries a TB-scale global KV cache: store it f8
+        cfg = dataclasses.replace(cfg, kv_cache_dtype="f8")
+    accum = S.default_accum_steps(cfg, shape, dp=dp, tp=tp)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    model = get_model(cfg)
+    with ctx.activate(mesh):
+        params_sds = S.params_struct(model)
+        # FSDP policy: for training, shard params/moments over data when
+        # the TP-sharded copy would not fit comfortably (>12B params);
+        # with gradient accumulation FSDP re-gathers per microbatch, so
+        # small models are cheaper replicated. Inference: 30B threshold.
+        fsdp = (cfg.param_count() > 6e9) if shape.kind == "train" else None
+        pspecs = param_specs(cfg, params_sds, mesh, fsdp=fsdp)
+        psh = to_named(pspecs, mesh)
+
+        # output shardings are pinned everywhere: leaving them to the
+        # partitioner let the returned KV caches come back badly sharded
+        # (mistral-large decode held a 22 GiB replicated cache output and
+        # donation silently failed on the layout mismatch)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        rep = NamedSharding(mesh, P())
+        if shape.kind == "train":
+            opt_cfg = S.default_opt_config(cfg)
+            opt_sds = S.opt_struct(params_sds, opt_cfg)
+            ospecs = opt_state_specs(cfg, opt_sds, pspecs, mesh)
+            osh = to_named(ospecs, mesh)
+            batch_sds = S.batch_spec_struct(cfg, shape)
+            bsh = to_named(batch_specs(cfg, batch_sds, mesh), mesh)
+            accum_dt = jnp.bfloat16 if cfg.param_count() > 100e9 else None
+            step_fn = S.make_train_step(model, opt_cfg,
+                                        accum_steps=accum,
+                                        accum_dtype=accum_dt,
+                                        grad_shardings=psh if accum > 1
+                                        else None)
+            jitted = jax.jit(step_fn, in_shardings=(psh, osh, bsh),
+                             out_shardings=(psh, osh, rep),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+        elif shape.kind == "prefill":
+            batch_sds = S.batch_spec_struct(cfg, shape)
+            bsh = to_named(batch_specs(cfg, batch_sds, mesh), mesh)
+            step_fn = S.make_prefill_step(model, cfg)
+            out_sds = jax.eval_shape(step_fn, params_sds, batch_sds)
+            cache_osh = to_named(cache_specs(cfg, out_sds[1], mesh), mesh)
+            jitted = jax.jit(step_fn, in_shardings=(psh, bsh),
+                             out_shardings=(rep, cache_osh))
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            cache_sds, token_sds = S.decode_input_struct(model, cfg, shape)
+            csh = to_named(cache_specs(cfg, cache_sds, mesh), mesh)
+            tsh = to_named(batch_specs(cfg, {"tokens": token_sds}, mesh),
+                           mesh)["tokens"]
+            step_fn = S.make_serve_step(model)
+            jitted = jax.jit(step_fn, in_shardings=(psh, csh, tsh),
+                             out_shardings=(rep, csh),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_sds, cache_sds, token_sds)
+
+        compiled = lowered.compile()
+
+    n_dev = mesh.size
+    terms = roofline_from_compiled(
+        compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+        n_devices=n_dev, model_flops_global=model_flops_for(cfg, shape))
+    mem = compiled.memory_analysis()
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "compile_s": round(time.time() - t0, 1),
+        "accum_steps": accum, "seq_shard": cfg.seq_shard,
+        "memory_analysis": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+        } if mem else None,
+        "roofline": terms.to_dict(),
+    }
+    if verbose:
+        ma = result["memory_analysis"]
+        per_dev_gb = terms.bytes_per_device / 2**30
+        print(f"[{arch} × {shape_name} × {mesh_name}] compiled in "
+              f"{result['compile_s']}s")
+        print(f"  memory_analysis: args={ma['argument_bytes']/2**30:.2f}GiB "
+              f"temp={ma['temp_bytes']/2**30:.2f}GiB "
+              f"out={ma['output_bytes']/2**30:.2f}GiB "
+              f"alias={ma['alias_bytes']/2**30:.2f}GiB "
+              f"-> {per_dev_gb:.2f}GiB/device "
+              f"({'FITS' if terms.fits_hbm else 'OVER'} 16GiB)")
+        print(f"  cost_analysis(xla): flops={terms.xla_flops:.3e} "
+              f"bytes={terms.xla_bytes:.3e} (scan bodies counted once)")
+        print(f"  roofline/device: compute={terms.compute_s*1e3:.2f}ms "
+              f"memory={terms.memory_s*1e3:.2f}ms "
+              f"collective={terms.collective_s*1e3:.2f}ms "
+              f"dominant={terms.dominant} "
+              f"frac={terms.roofline_frac:.3f}")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="run only the 2x16x16 mesh")
+    ap.add_argument("--single-pod", action="store_true",
+                    help="run only the 16x16 mesh")
+    ap.add_argument("--out", type=str, default=str(OUT_DIR))
+    args = ap.parse_args(argv)
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = [False, True]
+    if args.multi_pod:
+        meshes = [True]
+    if args.single_pod:
+        meshes = [False]
+
+    archs = ARCHS if (args.all or not args.arch) else \
+        [ARCH_IDS.get(args.arch, args.arch)]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape_name}_{'mp' if mp else 'sp'}"
+                path = out_dir / f"{tag}.json"
+                if path.exists():
+                    print(f"[{tag}] cached -> {path}")
+                    continue
+                try:
+                    res = run_cell(arch, shape_name, mp)
+                except Exception as e:
+                    traceback.print_exc()
+                    res = {"arch": arch, "shape": shape_name,
+                           "mesh": "mp" if mp else "sp",
+                           "status": "error", "error": str(e)[-2000:]}
+                    failures.append(tag)
+                path.write_text(json.dumps(res, indent=1))
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

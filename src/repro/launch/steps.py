@@ -1,0 +1,159 @@
+"""Step functions + abstract input specs shared by train/serve/dry-run."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.models import ModelConfig, get_model
+from repro.optim import OptConfig, apply_updates
+
+
+def make_train_step(model, opt_cfg: OptConfig, accum_steps: int = 1,
+                    accum_dtype=None, grad_shardings=None):
+    """Train step with optional gradient accumulation: the global batch is
+    split into ``accum_steps`` microbatches scanned sequentially, so saved
+    activations scale with the microbatch (the standard way to fit
+    256×4096-token steps in HBM). ``accum_dtype`` controls the gradient
+    carry: f32 default; bf16 for 100B+ models halves both the carry HBM
+    and the per-microbatch cross-data reduction wire (profiled at 22 TB/
+    step in f32 on mistral-large — EXPERIMENTS.md §Perf It.8)."""
+    if accum_steps <= 1:
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            new_params, new_state = apply_updates(params, grads, opt_state,
+                                                  opt_cfg)
+            return new_params, new_state, loss
+        return train_step
+
+    def split_micro(batch):
+        def re(path, a):
+            key = path[-1].key if hasattr(path[-1], "key") else ""
+            if key == "positions":        # (3, B, S) -> (k, 3, B/k, S)
+                k3, B, S = a.shape[0], a.shape[1], a.shape[2]
+                return a.reshape(k3, accum_steps, B // accum_steps, S) \
+                    .swapaxes(0, 1)
+            B = a.shape[0]
+            assert B % accum_steps == 0, \
+                f"batch {B} not divisible by accum {accum_steps}"
+            return a.reshape((accum_steps, B // accum_steps) + a.shape[1:])
+        return jax.tree_util.tree_map_with_path(re, batch)
+
+    acc_dt = accum_dtype or jnp.float32
+
+    def _pin(gi):
+        # pin each microbatch's gradients to the carry sharding at the
+        # point of production: without this the partitioner materializes
+        # full f32 wgrads and re-gathers them per micro per layer
+        # (profiled: 22 TB/step on mistral-large — EXPERIMENTS.md It.8/9)
+        if grad_shardings is None:
+            return gi
+        return jax.tree.map(jax.lax.with_sharding_constraint, gi,
+                            grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        micro = split_micro(batch)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+        def body(carry, mb):
+            loss_sum, g = carry
+            li, gi = jax.value_and_grad(model.loss)(params, mb)
+            gi = _pin(gi)
+            g = jax.tree.map(lambda a, b: a + b.astype(acc_dt), g, gi)
+            return (loss_sum + li, g), None
+
+        (loss_sum, g), _ = jax.lax.scan(body, (jnp.float32(0.0), g0), micro)
+        grads = jax.tree.map(lambda a: a.astype(jnp.float32) / accum_steps,
+                             g)
+        new_params, new_state = apply_updates(params, grads, opt_state,
+                                              opt_cfg)
+        return new_params, new_state, loss_sum / accum_steps
+    return train_step
+
+
+def default_accum_steps(cfg: ModelConfig, shape: ShapeSpec,
+                        dp: int = 16, tp: int = 1,
+                        budget_bytes: float = 4e9) -> int:
+    """Microbatch count so saved activations (≈ 8·L·tokens_dev·d bytes:
+    bf16 carry + attention lse + mlp residual factor) fit the budget.
+    With sequence-parallel residuals (seq_shard) the saved carry is
+    already sharded tp-ways, so far fewer microbatches are needed —
+    keeping FSDP re-gathers per step low."""
+    if shape.kind != "train":
+        return 1
+    tokens_dev = shape.global_batch * shape.seq_len / dp
+    layers = cfg.n_layers + cfg.n_enc_layers
+    est = 8.0 * layers * tokens_dev * cfg.d_model
+    if cfg.seq_shard:
+        est /= tp
+    k = 1
+    max_k = max(shape.global_batch // dp, 1)
+    while k < max_k and est / k > budget_bytes:
+        k *= 2
+    return min(k, max_k)
+
+
+def make_grad_step(model):
+    def grad_step(params, batch):
+        return jax.value_and_grad(model.loss)(params, batch)
+    return grad_step
+
+
+def make_prefill_step(model, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["tokens"], batch["frames"])
+    else:
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["tokens"])
+    return prefill_step
+
+
+def make_serve_step(model):
+    def serve_step(params, cache, token):
+        return model.decode_step(params, cache, token)
+    return serve_step
+
+
+def default_opt_config(cfg: ModelConfig, total_steps: int = 10_000
+                       ) -> OptConfig:
+    """int8 Adam moments for ≥100B-param archs (HBM fit; DESIGN.md §5)."""
+    moment = "int8" if cfg.param_count() > 100e9 else "f32"
+    return OptConfig(moment_dtype=moment, total_steps=total_steps)
+
+
+def batch_spec_struct(cfg: ModelConfig, shape: ShapeSpec
+                      ) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract train/prefill batch: ShapeDtypeStruct stand-ins only."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    batch: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((B, S), i32),
+    }
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                               jnp.float32)
+    if cfg.family == "vlm":
+        batch["positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+    return batch
+
+
+def decode_input_struct(model, cfg: ModelConfig, shape: ShapeSpec):
+    """(cache, token) stand-ins for a decode step at full cache length."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    token = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return cache, token
+
+
+def params_struct(model):
+    return jax.eval_shape(model.init, jax.random.PRNGKey(0))
+
+
+def opt_struct(params_sds, opt_cfg: OptConfig):
+    from repro.optim import init_opt_state
+    return jax.eval_shape(lambda p: init_opt_state(p, opt_cfg), params_sds)

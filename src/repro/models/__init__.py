@@ -1,0 +1,14 @@
+"""Model zoo: uniform factory over all assigned architecture families."""
+from .common import ModelConfig, MoEConfig, SSMConfig
+from .lm import LM
+from .whisper import EncDecLM
+
+
+def get_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return LM(cfg)
+
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "LM", "EncDecLM",
+           "get_model"]

@@ -1,0 +1,225 @@
+"""Model configuration and shared utilities (RoPE/M-RoPE, init, losses)."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    # Arctic-style dense residual MLP running in parallel with the experts
+    residual_ffn_dim: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128        # N
+    head_dim: int = 64          # P
+    expand: int = 2             # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 128
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 128
+    norm: str = "rmsnorm"       # rmsnorm | layernorm
+    act: str = "swiglu"         # swiglu | gelu
+    rope_theta: float = 10_000.0
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (zamba2): one *shared* attention+MLP block applied every k SSM
+    # blocks (parameter tying, arXiv:2411.15242)
+    shared_attn_every: int = 0
+    # encdec (whisper): encoder depth; frontend is a stub (precomputed
+    # frame embeddings are model inputs)
+    n_enc_layers: int = 0
+    # vlm (qwen2-vl): M-RoPE section split of head_dim/2 (t, h, w)
+    mrope_sections: Optional[Tuple[int, int, int]] = None
+    tie_embeddings: bool = False
+    dtype: Any = jnp.bfloat16
+    # training-memory policy
+    remat: bool = True
+    # Megatron-style sequence parallelism for the residual stream: the
+    # scan carry (saved activations) is sharded over the model axis along
+    # S; XLA all-gathers at layer entry / reduce-scatters at exit
+    seq_shard: bool = False
+    loss_chunk: int = 512       # sequence-chunked cross-entropy (large vocab)
+    # decode KV-cache storage dtype: "bf16" (default) or "f8" (e4m3 —
+    # halves the cache; attention math upcasts, standard for long-context
+    # serving of 100B+ models)
+    kv_cache_dtype: str = "bf16"
+    max_seq: int = 131_072
+    sub_quadratic: bool = False  # supports long_500k shapes
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + layers), for rooflines."""
+        d, v = self.d_model, self.vocab
+        n = v * d  # embed
+        if not self.tie_embeddings:
+            n += v * d
+        attn = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        if self.act == "swiglu":
+            mlp = 3 * d * self.d_ff
+        else:
+            mlp = 2 * d * self.d_ff
+        if self.family in ("dense", "vlm"):
+            n += self.n_layers * (attn + mlp + 2 * d)
+        elif self.family == "moe":
+            e = self.moe.n_experts
+            moe_mlp = e * 3 * d * self.d_ff + d * e
+            res = 3 * d * self.moe.residual_ffn_dim
+            n += self.n_layers * (attn + moe_mlp + res + 2 * d)
+        elif self.family == "ssm":
+            n += self.n_layers * (self._ssm_block_params() + d)
+        elif self.family == "hybrid":
+            n += self.n_layers * (self._ssm_block_params() + d)
+            n += attn + mlp + 2 * d  # one shared block
+        elif self.family == "encdec":
+            n += self.n_layers * (2 * attn + mlp + 3 * d)      # dec w/ cross
+            n += self.n_enc_layers * (attn + mlp + 2 * d)
+        return n
+
+    def _ssm_block_params(self) -> int:
+        d = self.d_model
+        di = self.ssm.d_inner(d)
+        nh = self.ssm.n_heads(d)
+        ns = self.ssm.state_dim
+        # in_proj: z, x, B, C, dt; out_proj; conv; A, D, dt_bias; norm
+        in_proj = d * (2 * di + 2 * ns + nh)
+        return (in_proj + di * d + self.ssm.conv_width * (di + 2 * ns)
+                + 3 * nh + di)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k experts only)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        e, k = self.moe.n_experts, self.moe.top_k
+        dead = self.n_layers * (e - k) * 3 * d * self.d_ff
+        return self.param_count() - dead
+
+
+# -- RoPE -----------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def rope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., head_dim) in rotate-half layout."""
+    freqs = rope_freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # (..., hd/2)
+    ang = jnp.concatenate([ang, ang], axis=-1)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions: jnp.ndarray, head_dim: int, theta: float,
+                  sections: Tuple[int, int, int]):
+    """Qwen2-VL M-RoPE. positions (3, B, S) for (t, h, w); sections sum to
+    head_dim/2. Text tokens use identical t/h/w positions (equivalent to
+    1-D RoPE); vision patches get distinct h/w — the frontend stub supplies
+    the position ids."""
+    assert sum(sections) == head_dim // 2
+    freqs = rope_freqs(head_dim, theta)                        # (hd/2,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs     # (3,B,S,hd/2)
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang[i, ..., start:start + sec])
+        start += sec
+    ang1 = jnp.concatenate(parts, axis=-1)                     # (B,S,hd/2)
+    ang2 = jnp.concatenate([ang1, ang1], axis=-1)
+    return jnp.cos(ang2), jnp.sin(ang2)
+
+
+# -- init helpers ------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def split_keys(key, names):
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+# -- loss ---------------------------------------------------------------------------
+def chunked_softmax_xent(hidden: jnp.ndarray, unembed: jnp.ndarray,
+                         labels: jnp.ndarray, mask: jnp.ndarray,
+                         chunk: int = 512) -> jnp.ndarray:
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    Scans over sequence chunks; per chunk the (B, c, V) logits live only
+    inside the scan body (essential for 256k vocabularies at 4k seq).
+    hidden: (B, S, D) f32/bf16; unembed: (D, V); labels/mask: (B, S).
+    """
+    B, S, D = hidden.shape
+    chunk = min(chunk, S)
+    if S % chunk != 0:
+        chunk = math.gcd(S, chunk) or S
+    n = S // chunk
+    hid = hidden.reshape(B, n, chunk, D).swapaxes(0, 1)
+    lab = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    msk = mask.reshape(B, n, chunk).swapaxes(0, 1)
+
+    from repro.parallel import ctx
+
+    # pad vocab so the logits' V axis shards over the model axis even for
+    # odd vocab sizes (whisper's 51865); padded columns are masked to -inf
+    V = unembed.shape[-1]
+    Vp = (V + 2047) // 2048 * 2048
+    if Vp != V:
+        unembed = jnp.pad(unembed, ((0, 0), (0, Vp - V)))
+
+    @jax.checkpoint
+    def body(carry, xs):
+        # rematerialized: backward recomputes the (B, chunk, V) logits
+        # instead of saving softmax probs for every chunk (the whole point
+        # of chunking at 256k vocab)
+        h, y, m = xs
+        h = ctx.constrain(h, "dp", None, None)
+        logits = (h.astype(jnp.float32) @ unembed.astype(jnp.float32))
+        logits = ctx.constrain(logits, "dp", None, "tp")
+        if Vp != V:
+            col = jnp.arange(Vp)
+            logits = jnp.where(col[None, None, :] < V, logits, -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * m
+        return (carry[0] + nll.sum(), carry[1] + m.sum()), None
+
+    (tot, cnt), _ = lax.scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                             (hid, lab, msk))
+    return tot / jnp.maximum(cnt, 1.0)

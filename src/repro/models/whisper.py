@@ -1,0 +1,205 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv/mel frontend is a STUB per the assignment: the encoder consumes
+precomputed frame embeddings (B, S_enc, d_model) supplied by
+``input_specs()``. LayerNorm + GELU + MHA (no RoPE; sinusoidal encoder
+positions, learned decoder positions) to match the Whisper architecture.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ops
+from repro.parallel import ctx
+from .common import ModelConfig, chunked_softmax_xent, dense_init, split_keys
+from . import layers as L
+
+
+def sinusoidal_pos(S: int, d: int, dtype=jnp.float32):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10_000.0 ** (dim / d))
+    pe = jnp.zeros((S, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang))
+    pe = pe.at[:, 1::2].set(jnp.cos(ang))
+    return pe.astype(dtype)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family == "encdec"
+        self.cfg = cfg
+
+    # -- init ----------------------------------------------------------------
+    def _enc_layer_init(self, key):
+        cfg = self.cfg
+        ka, km = jax.random.split(key)
+        return {"ln1": L.norm_init(cfg), "attn": L.attn_init(ka, cfg),
+                "ln2": L.norm_init(cfg), "mlp": L.mlp_init(km, cfg)}
+
+    def _dec_layer_init(self, key):
+        cfg = self.cfg
+        ka, kc, km = jax.random.split(key, 3)
+        return {"ln1": L.norm_init(cfg), "self_attn": L.attn_init(ka, cfg),
+                "ln2": L.norm_init(cfg), "cross_attn": L.attn_init(kc, cfg),
+                "ln3": L.norm_init(cfg), "mlp": L.mlp_init(km, cfg)}
+
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        ks = split_keys(rng, ["embed", "pos", "enc", "dec", "unembed"])
+        keys_enc = jax.random.split(ks["enc"], cfg.n_enc_layers)
+        keys_dec = jax.random.split(ks["dec"], cfg.n_layers)
+        return {
+            "embed": dense_init(ks["embed"], (cfg.vocab, cfg.d_model),
+                                cfg.dtype, scale=0.02),
+            "dec_pos": dense_init(ks["pos"], (cfg.max_seq, cfg.d_model),
+                                  cfg.dtype, scale=0.02),
+            "enc_layers": jax.vmap(self._enc_layer_init)(keys_enc),
+            "dec_layers": jax.vmap(self._dec_layer_init)(keys_dec),
+            "enc_norm": L.norm_init(cfg),
+            "final_norm": L.norm_init(cfg),
+        }
+
+    def _unembed(self, params):
+        return params["embed"].T  # whisper ties output to token embedding
+
+    # -- encoder -----------------------------------------------------------------
+    def encode(self, params, frames):
+        """frames: (B, S_enc, d_model) precomputed embeddings (stub)."""
+        cfg = self.cfg
+        B, S, _ = frames.shape
+        h = frames.astype(cfg.dtype) + sinusoidal_pos(S, cfg.d_model,
+                                                      cfg.dtype)
+        h = ctx.constrain(h, "dp", None, None)
+
+        def body(h, lp):
+            h = h + L.attn_apply(lp["attn"],
+                                 L.norm_apply(lp["ln1"], h, cfg),
+                                 None, None, cfg, causal=False)
+            h = h + L.mlp_apply(lp["mlp"],
+                                L.norm_apply(lp["ln2"], h, cfg), cfg)
+            return ctx.constrain(h, "dp",
+                                 "tp" if cfg.seq_shard else None,
+                                 None), None
+        step = jax.checkpoint(body) if cfg.remat else body
+        h, _ = lax.scan(step, h, params["enc_layers"])
+        return L.norm_apply(params["enc_norm"], h, cfg)
+
+    # -- decoder (training) ----------------------------------------------------------
+    def forward(self, params, tokens, enc_out):
+        cfg = self.cfg
+        B, S = tokens.shape
+        h = params["embed"][tokens] + params["dec_pos"][:S][None]
+        h = ctx.constrain(h, "dp", None, None)
+
+        def body(h, lp):
+            h = h + L.attn_apply(lp["self_attn"],
+                                 L.norm_apply(lp["ln1"], h, cfg),
+                                 None, None, cfg, causal=True)
+            h = h + L.attn_apply(lp["cross_attn"],
+                                 L.norm_apply(lp["ln2"], h, cfg),
+                                 None, None, cfg, kv_x=enc_out)
+            h = h + L.mlp_apply(lp["mlp"],
+                                L.norm_apply(lp["ln3"], h, cfg), cfg)
+            return ctx.constrain(h, "dp",
+                                 "tp" if cfg.seq_shard else None,
+                                 None), None
+        step = jax.checkpoint(body) if cfg.remat else body
+        h, _ = lax.scan(step, h, params["dec_layers"])
+        return L.norm_apply(params["final_norm"], h, cfg)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["frames"])
+        h = self.forward(params, batch["tokens"], enc_out)
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones_like(batch["labels"], jnp.float32)
+        return chunked_softmax_xent(h, self._unembed(params),
+                                    batch["labels"], mask,
+                                    chunk=cfg.loss_chunk)
+
+    # -- serving ------------------------------------------------------------------------
+    def init_cache(self, batch: int, max_seq: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        Lc = cfg.n_layers
+        return {
+            "pos": jnp.zeros((), jnp.int32),
+            "k": jnp.zeros((Lc, batch, cfg.n_kv_heads, max_seq,
+                            cfg.head_dim), cfg.dtype),
+            "v": jnp.zeros((Lc, batch, cfg.n_kv_heads, max_seq,
+                            cfg.head_dim), cfg.dtype),
+            # cross-attention K/V precomputed from the encoder output
+            "xk": jnp.zeros((Lc, batch, cfg.n_kv_heads, max_seq,
+                             cfg.head_dim), cfg.dtype),
+            "xv": jnp.zeros((Lc, batch, cfg.n_kv_heads, max_seq,
+                             cfg.head_dim), cfg.dtype),
+        }
+
+    def prefill(self, params, tokens, frames=None,
+                max_seq: Optional[int] = None):
+        """Encode + run decoder over prompt tokens, building caches."""
+        cfg = self.cfg
+        B, S = tokens.shape
+        max_seq = max_seq or (S + 256)
+        if frames is None:
+            frames = jnp.zeros((B, S, cfg.d_model), cfg.dtype)
+        enc_out = self.encode(params, frames)
+        h = params["embed"][tokens] + params["dec_pos"][:S][None]
+
+        def body(h, lp):
+            xn = L.norm_apply(lp["ln1"], h, cfg)
+            a, kv = L.attn_prefill(lp["self_attn"], xn, None, None, cfg)
+            h = h + a
+            xk = L._split_heads(enc_out @ lp["cross_attn"]["wk"],
+                                cfg.n_kv_heads, cfg.head_dim)
+            xv = L._split_heads(enc_out @ lp["cross_attn"]["wv"],
+                                cfg.n_kv_heads, cfg.head_dim)
+            xn2 = L.norm_apply(lp["ln2"], h, cfg)
+            c = L.attn_apply(lp["cross_attn"], xn2, None, None, cfg,
+                             kv_x=enc_out)
+            h = h + c
+            h = h + L.mlp_apply(lp["mlp"],
+                                L.norm_apply(lp["ln3"], h, cfg), cfg)
+            return h, (kv[0], kv[1], xk, xv)
+        h, (k, v, xk, xv) = lax.scan(body, h, params["dec_layers"])
+        k, v = jax.tree.map(
+            lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, 0),
+                                  (0, max_seq - S), (0, 0))), (k, v))
+        h = L.norm_apply(params["final_norm"], h, cfg)
+        logits = (h[:, -1:].astype(jnp.float32)
+                  @ self._unembed(params).astype(jnp.float32))
+        cache = {"pos": jnp.int32(S), "k": k, "v": v, "xk": xk, "xv": xv}
+        return logits, cache
+
+    def decode_step(self, params, cache, token):
+        cfg = self.cfg
+        pos = cache["pos"]
+        h = params["embed"][token] + params["dec_pos"][pos][None, None]
+
+        def body(h, xs):
+            lp, kc, vc, xk, xv = xs
+            xn = L.norm_apply(lp["ln1"], h, cfg)
+            a, (kc, vc) = L.attn_decode(lp["self_attn"], xn, (kc, vc), pos,
+                                        cfg)
+            h = h + a
+            xn2 = L.norm_apply(lp["ln2"], h, cfg)
+            q = L._split_heads(xn2 @ lp["cross_attn"]["wq"], cfg.n_heads,
+                               cfg.head_dim)
+            o = ops.attention_decode(q, xk, xv)
+            h = h + L._merge_heads(o) @ lp["cross_attn"]["wo"]
+            h = h + L.mlp_apply(lp["mlp"],
+                                L.norm_apply(lp["ln3"], h, cfg), cfg)
+            return h, (kc, vc)
+        h, (ks, vs) = lax.scan(body, h, (params["dec_layers"], cache["k"],
+                                         cache["v"], cache["xk"],
+                                         cache["xv"]))
+        cache = dict(cache, k=ks, v=vs, pos=pos + 1)
+        h = L.norm_apply(params["final_norm"], h, cfg)
+        logits = (h.astype(jnp.float32)
+                  @ self._unembed(params).astype(jnp.float32))
+        return logits, cache

@@ -1,0 +1,8 @@
+"""Distribution layer: sharding rules (DP/TP/EP/SP/FSDP), activation
+sharding context, pipeline parallelism, gradient compression."""
+from . import ctx
+from .sharding import (batch_specs, cache_specs, mesh_axes, opt_state_specs,
+                       param_specs, to_named)
+
+__all__ = ["ctx", "batch_specs", "cache_specs", "mesh_axes",
+           "opt_state_specs", "param_specs", "to_named"]

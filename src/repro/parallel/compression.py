@@ -1,0 +1,103 @@
+"""Gradient compression for the DP all-reduce, with error feedback.
+
+At multi-pod scale the gradient all-reduce over the pod (DCI) axis is the
+bandwidth bottleneck; compressing the pod-axis reduction is the standard
+trick. Implemented jittable and exact-shape-preserving:
+
+  * bf16 compression — halves wire bytes, negligible quality loss;
+  * int8 block compression — per-row absmax scale (4x fewer bytes), with
+    **error feedback**: the quantization residual is carried into the next
+    step's gradient so bias does not accumulate (Seide et al., 1-bit SGD
+    lineage).
+
+Usage in the train step:
+    comp = Compressor("int8_ef")
+    g_c, new_state = comp.compress(grads, state)      # before all-reduce
+    grads = comp.decompress(g_c)                      # after
+The wire-byte saving shows up in the roofline collective term (§Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+MODES = ("none", "bf16", "int8", "int8_ef")
+
+
+@dataclasses.dataclass(frozen=True)
+class Compressor:
+    mode: str = "none"
+
+    def __post_init__(self):
+        assert self.mode in MODES
+
+    def init_state(self, grads):
+        if self.mode != "int8_ef":
+            return None
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32),
+                            grads)
+
+    def compress(self, grads, state=None) -> Tuple[Any, Any]:
+        if self.mode == "none":
+            return grads, state
+        if self.mode == "bf16":
+            return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads), \
+                state
+        if self.mode == "int8":
+            return jax.tree.map(_q8, grads), state
+
+        # int8 with error feedback
+        def q_ef(g, e):
+            corrected = g.astype(jnp.float32) + e
+            q = _q8(corrected)
+            back = _dq8(q)
+            return q, corrected - back
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_e = tdef.flatten_up_to(state)
+        pairs = [q_ef(g, e) for g, e in zip(flat_g, flat_e)]
+        qs = tdef.unflatten([p[0] for p in pairs])
+        errs = tdef.unflatten([p[1] for p in pairs])
+        return qs, errs
+
+    def decompress(self, comp):
+        if self.mode == "none":
+            return comp
+        if self.mode == "bf16":
+            return jax.tree.map(lambda g: g.astype(jnp.float32), comp)
+        return jax.tree.map(_dq8, comp,
+                            is_leaf=lambda x: isinstance(x, dict)
+                            and "q" in x)
+
+    def wire_bytes(self, grads) -> int:
+        """Bytes on the wire per all-reduce pass (for roofline accounting)."""
+        def nbytes(g):
+            n = 1
+            for d in g.shape:
+                n *= d
+            if self.mode == "none":
+                return n * g.dtype.itemsize
+            if self.mode == "bf16":
+                return n * 2
+            rows = n // g.shape[-1] if g.ndim else 1
+            return n + 4 * rows          # int8 payload + f32 scales
+        return sum(nbytes(g) for g in jax.tree.leaves(grads))
+
+
+def _q8(g) -> Dict[str, jnp.ndarray]:
+    g32 = g.astype(jnp.float32)
+    flat = g32.reshape(-1, g32.shape[-1]) if g32.ndim > 1 \
+        else g32.reshape(1, -1)
+    scale = jnp.max(jnp.abs(flat), axis=-1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return {"q": q.reshape(g.shape), "scale": scale.astype(jnp.float32),
+            "shape": jnp.zeros((g32.ndim,), jnp.int8)}  # static ndim tag
+
+
+def _dq8(c: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    q = c["q"]
+    flat = q.reshape(-1, q.shape[-1]) if q.ndim > 1 else q.reshape(1, -1)
+    return (flat.astype(jnp.float32) * c["scale"]).reshape(q.shape)

@@ -1,0 +1,78 @@
+"""Sharding context: lets model code place activation sharding constraints
+without threading the mesh through every call.
+
+``activate(mesh)`` (context manager) is set by the launcher/dry-run; model
+code calls ``constrain(x, "data", None, "model")``-style hints which are
+no-ops when no mesh is active (smoke tests, single device).
+
+Axis aliases: "dp" expands to all data axes of the active mesh
+(("pod","data") on the multi-pod mesh), "tp" to the model axis.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def activate(mesh: Optional[Mesh]):
+    prev = active_mesh()
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+def _expand(mesh: Mesh, axis):
+    if axis == "dp":
+        dp = tuple(n for n in mesh.axis_names if n in ("pod", "data"))
+        return dp if len(dp) > 1 else (dp[0] if dp else None)
+    if axis == "tp":
+        return "model" if "model" in mesh.axis_names else None
+    return axis if axis in (None,) or axis in mesh.axis_names else None
+
+
+def _fits(mesh: Mesh, dim: int, axis) -> bool:
+    if axis is None:
+        return True
+    names = axis if isinstance(axis, tuple) else (axis,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return dim % size == 0
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint if a mesh is active and dims divide."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    resolved = []
+    for dim, ax in zip(x.shape, axes):
+        ax = _expand(mesh, ax)
+        resolved.append(ax if _fits(mesh, dim, ax) else None)
+    spec = P(*resolved)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def dp_size() -> int:
+    mesh = active_mesh()
+    if mesh is None:
+        return 1
+    out = 1
+    for n in mesh.axis_names:
+        if n in ("pod", "data"):
+            out *= mesh.shape[n]
+    return out

@@ -1,0 +1,215 @@
+"""Sharding rules: DP / TP (Megatron) / EP (experts) / SP (sequence) / FSDP.
+
+Spec construction is *path-based*: every parameter leaf is matched by its
+pytree path and gets a PartitionSpec aligned with the mesh axes
+``(pod, data, model)`` (multi-pod) or ``(data, model)`` (single pod).
+
+Rules (with automatic divisibility fallback — a non-dividing axis is
+dropped to replication rather than failing):
+
+  embed (V, D)            -> (model, fsdp)         vocab-parallel
+  unembed (D, V)          -> (fsdp, model)
+  wq/wg/wu/w_z/w_x (D, F) -> (fsdp, model)         column-parallel
+  wo/wd/w_out (F, D)      -> (model, fsdp)         row-parallel
+  wk/wv (D, KVD)          -> (fsdp, None)          GQA KV replicated
+  moe wg/wu (E, D, F)     -> (model, fsdp, None)   expert-parallel
+  moe wd (E, F, D)        -> (model, None, fsdp)
+  router, norms, scalars  -> replicated
+  mamba conv_x (W, di)    -> (None, model); per-head vectors (nh,) -> model
+
+FSDP (sharding the non-TP dim over the data axes) turns on automatically
+for configs above ``FSDP_THRESHOLD`` parameters; under ``lax.scan`` XLA
+all-gathers one layer at a time, overlapping with compute (the standard
+ZeRO-3 schedule).
+
+Activations: tokens/labels shard batch over (pod, data). Decode caches
+shard batch over data, KV heads over model when divisible, else the
+sequence axis (SP).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import ModelConfig
+
+FSDP_THRESHOLD = 30e9
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    dp: Tuple[str, ...]       # data-parallel axes (("pod","data") or ("data",))
+    tp: str = "model"
+
+    @property
+    def dp_spec(self):
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+
+def mesh_axes(mesh: Mesh) -> MeshAxes:
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n in ("pod", "data"))
+    return MeshAxes(dp=dp)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return int(np.prod([mesh.shape[n] for n in name]))
+    return mesh.shape[name]
+
+
+def _fits(dim: int, mesh: Mesh, axis) -> bool:
+    return axis is None or dim % _axis_size(mesh, axis) == 0
+
+
+def _spec(mesh: Mesh, shape, *axes):
+    """Build a PartitionSpec, dropping axes that don't divide."""
+    out = []
+    for dim, ax in zip(shape, axes):
+        out.append(ax if (ax is not None and _fits(dim, mesh, ax)) else None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_specs(cfg: ModelConfig, params_tree, mesh: Mesh,
+                fsdp: Optional[bool] = None):
+    """PartitionSpec pytree matching ``params_tree`` (shapes or arrays)."""
+    ax = mesh_axes(mesh)
+    if fsdp is None:
+        fsdp = cfg.param_count() > FSDP_THRESHOLD
+    fs = ax.dp_spec if fsdp else None
+    tp = ax.tp
+
+    def leaf_spec(path, leaf):
+        name = _path_str(path)
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        stacked = 1 if _is_stacked(name) else 0
+
+        def S(*axes):  # pad for the stacked layer axis
+            return _spec(mesh, shape, *([None] * stacked + list(axes)))
+
+        base = name.rsplit("/", 1)[-1]
+        if "embed" == base:
+            return _spec(mesh, shape, tp, fs)
+        if "unembed" == base:
+            return _spec(mesh, shape, fs, tp)
+        if "dec_pos" == base:
+            return _spec(mesh, shape, None, None)
+        if base in ("wq", "wg", "wu", "wi", "w_z", "w_x"):
+            if "moe" in name and nd - stacked == 3:   # (E, D, F)
+                return S(tp, fs, None)
+            return S(fs, tp)
+        if base in ("wo", "wd", "w_out"):
+            if "moe" in name and nd - stacked == 3:   # (E, F, D)
+                return S(tp, None, fs)
+            return S(tp, fs)
+        if base in ("wk", "wv"):
+            return S(fs, None)
+        if base == "router":
+            return S(None, None)
+        if base in ("w_B", "w_C", "w_dt"):
+            return S(None, None)
+        if base == "conv_x":
+            return S(None, tp)
+        if base in ("conv_b", "conv_c"):
+            return S(None, None)
+        if base in ("a_log", "d_skip", "dt_bias"):
+            return S(tp)
+        if base == "norm_g":                          # (di,) gated norm
+            return S(tp)
+        # norms (g, b), scalars
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_tree)
+
+
+def _is_stacked(name: str) -> bool:
+    return ("layers" in name or "enc_layers" in name
+            or "dec_layers" in name)
+
+
+def opt_state_specs(cfg: ModelConfig, opt_state_tree, param_spec_tree,
+                    mesh: Mesh):
+    """Optimizer moments inherit the param spec; int8 scale rows follow the
+    leading axes; step is replicated."""
+    def match(ps, leaf_tree):
+        if isinstance(leaf_tree, dict) and "q" in leaf_tree:  # int8 moments
+            # scale has the q shape with last dim 1: inherit all but last
+            axes = list(ps) + [None] * (len(leaf_tree["q"].shape) - len(ps))
+            scale_spec = P(*(axes[:-1] + [None])) if axes else P()
+            return {"q": ps, "scale": scale_spec}
+        return ps
+
+    return {
+        "step": P(),
+        "m": jax.tree.map(match, param_spec_tree, opt_state_tree["m"],
+                          is_leaf=lambda x: isinstance(x, P)),
+        "v": jax.tree.map(match, param_spec_tree, opt_state_tree["v"],
+                          is_leaf=lambda x: isinstance(x, P)),
+    }
+
+
+def batch_specs(cfg: ModelConfig, batch_tree, mesh: Mesh):
+    """Token batches: shard batch dim over all data axes (drop if it does
+    not divide, e.g. long_500k batch=1)."""
+    ax = mesh_axes(mesh)
+
+    def leaf(path, leaf):
+        shape = tuple(leaf.shape)
+        name = _path_str(path)
+        if name == "positions":        # (3, B, S) for vlm
+            return _spec(mesh, shape, None, ax.dp_spec, None)
+        if len(shape) >= 1:
+            return _spec(mesh, shape, ax.dp_spec,
+                         *([None] * (len(shape) - 1)))
+        return P()
+    return jax.tree_util.tree_map_with_path(leaf, batch_tree)
+
+
+def cache_specs(cfg: ModelConfig, cache_tree, mesh: Mesh):
+    """Decode caches: batch over data; KV heads over model when divisible,
+    else sequence (SP); SSM states shard heads over model."""
+    ax = mesh_axes(mesh)
+    tp = ax.tp
+    tp_n = _axis_size(mesh, tp)
+
+    def leaf(path, leaf):
+        name = _path_str(path)
+        shape = tuple(leaf.shape)
+        base = name.rsplit("/", 1)[-1]
+        if base in ("k", "v", "xk", "xv"):            # (L,B,KH,S,hd)
+            _, B, KH, S, _ = shape
+            if KH % tp_n == 0:
+                return _spec(mesh, shape, None, ax.dp_spec, tp, None, None)
+            return _spec(mesh, shape, None, ax.dp_spec, None, tp, None)
+        if base == "h":                               # (L,B,nh,N,P)
+            return _spec(mesh, shape, None, ax.dp_spec, tp, None, None)
+        if base in ("conv_x",):                       # (L,B,W-1,di)
+            return _spec(mesh, shape, None, ax.dp_spec, None, tp)
+        if base in ("conv_b", "conv_c"):
+            return _spec(mesh, shape, None, ax.dp_spec, None, None)
+        if base == "pos":
+            return P()
+        return P(*([None] * len(shape)))
+    return jax.tree_util.tree_map_with_path(leaf, cache_tree)
+
+
+def to_named(tree_of_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))

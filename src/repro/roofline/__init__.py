@@ -1,0 +1,5 @@
+from .hlo_analysis import HLOReport, analyze, parse_hlo
+from .report import RooflineTerms, roofline_from_compiled
+
+__all__ = ["HLOReport", "analyze", "parse_hlo", "RooflineTerms",
+           "roofline_from_compiled"]

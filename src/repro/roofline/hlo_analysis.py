@@ -1,0 +1,329 @@
+"""Trip-count-aware HLO analysis for the roofline report.
+
+XLA's ``compiled.cost_analysis()`` visits a ``while`` body ONCE, so a
+scan-over-layers model under-reports FLOPs/bytes by the layer count
+(verified empirically — see EXPERIMENTS.md §Roofline methodology). This
+module re-walks the optimized HLO text with execution-count propagation:
+
+* parse computations + call graph (while bodies/conds — trip counts taken
+  from the ``known_trip_count`` backend config, falling back to the
+  loop-condition constant — plus call/fusion/conditional);
+* execution count of a computation = Σ over callers (× trip count);
+* FLOPs: every ``dot`` = 2 · |result| · K (× exec count); convolutions
+  likewise. Elementwise flops are secondary and omitted (documented
+  under-count; these models are MXU-dominated);
+* HBM bytes (traffic model, per instruction × exec count):
+    dot/conv/reduce      -> result + full operands
+    dynamic-update-slice -> 2 × update-operand bytes (in-place cache write)
+    fusion w/ DUS root   -> same, resolved through the fused computation
+    everything else      -> result + Σ min(operand, result)
+  (the min() caps slice-style fusions that read a window of a big buffer);
+* collectives: result bytes × ring wire factor ((g-1)/g per pass; 2× for
+  all-reduce; ×(g-1) for reduce-scatter whose HLO result is the shard)
+  × exec count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+# opcode follows the result type, which ends with ')', '}' or ']'
+_OPCODE_RES = [re.compile(r"[\)\}\]]\s*([a-z][\w\-]*)\(")]
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_FULL_READ_OPS = ("dot", "convolution", "reduce", "reduce-window", "sort",
+                  "scatter")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for _, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    opcode: str
+    type_str: str
+    rest: str
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = dataclasses.field(default_factory=list)
+    is_entry: bool = False
+    root: Optional[Instr] = None
+
+
+def _opcode_of(body: str) -> Tuple[str, str, str]:
+    best = None
+    for rex in _OPCODE_RES:
+        m = rex.search(body)
+        if m and (best is None or m.start(1) < best.start(1)):
+            best = m
+    if best is None:
+        return body, "", ""
+    return body[:best.start(1)], best.group(1), body[best.start(1):]
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        mc = _COMP_RE.match(line)
+        if mc and line.rstrip().endswith("{"):
+            cur = Computation(name=mc.group(2), is_entry=bool(mc.group(1)))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, body = mi.group(1), mi.group(2)
+        type_str, opcode, rest = _opcode_of(body)
+        operands: List[str] = []
+        if opcode:
+            ops_m = re.match(re.escape(opcode) + r"\(([^)]*)\)", rest)
+            if ops_m:
+                operands = [o.strip().lstrip("%") for o in
+                            ops_m.group(1).split(",") if o.strip()]
+        ins = Instr(name=name, opcode=opcode, type_str=type_str,
+                    rest=rest, operands=operands)
+        cur.instrs.append(ins)
+        if "ROOT" in line.split("=")[0]:
+            cur.root = ins
+    return comps
+
+
+def _attr_comp(rest: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", rest)
+    return m.group(1) if m else None
+
+
+def _trip_count(ins: Instr, comps: Dict[str, Computation]) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', ins.rest)
+    if m:
+        return int(m.group(1))
+    cond_name = _attr_comp(ins.rest, "condition")
+    cond = comps.get(cond_name)
+    best = 1
+    if cond is not None:
+        for cins in cond.instrs:
+            for mm in re.finditer(r"constant\((\d+)\)",
+                                  cins.type_str + cins.rest):
+                best = max(best, int(mm.group(1)))
+    return best
+
+
+def execution_counts(comps: Dict[str, Computation]) -> Dict[str, float]:
+    counts: Dict[str, float] = {c.name: 0.0 for c in comps.values()}
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {name: 1.0 for name in comps}
+    counts[entry.name] = 1.0
+    for _ in range(len(comps) + 2):
+        new = {c.name: 0.0 for c in comps.values()}
+        new[entry.name] = 1.0
+        for comp in comps.values():
+            base = counts[comp.name]
+            if base == 0:
+                continue
+            for ins in comp.instrs:
+                if ins.opcode == "while":
+                    trips = _trip_count(ins, comps)
+                    body = _attr_comp(ins.rest, "body")
+                    cond = _attr_comp(ins.rest, "condition")
+                    if body in comps:
+                        new[body] += base * trips
+                    if cond in comps:
+                        new[cond] += base * (trips + 1)
+                elif ins.opcode == "call":
+                    tgt = _attr_comp(ins.rest, "to_apply")
+                    if tgt in comps:
+                        new[tgt] += base
+                elif ins.opcode == "conditional":
+                    for key in ("true_computation", "false_computation"):
+                        tgt = _attr_comp(ins.rest, key)
+                        if tgt in comps:
+                            new[tgt] += base
+                    m = re.search(r"branch_computations=\{([^}]*)\}",
+                                  ins.rest)
+                    if m:
+                        for t in m.group(1).split(","):
+                            t = t.strip().lstrip("%")
+                            if t in comps:
+                                new[t] += base
+        if all(abs(new[k] - counts[k]) <= 1e-9 for k in counts):
+            counts = new
+            break
+        counts = new
+    return counts
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,\s]*)\}", rest)
+    if m and m.group(1).strip():
+        return len(m.group(1).split(","))
+    return default
+
+
+@dataclasses.dataclass
+class HLOReport:
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_wire_bytes: float = 0.0
+    collective_breakdown: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_count: int = 0
+    n_while: int = 0
+    trip_counts: List[int] = dataclasses.field(default_factory=list)
+    # (op, result_shape, group, execs, wire_bytes, metadata_hint)
+    collectives: List[tuple] = dataclasses.field(default_factory=list)
+
+    def top_collectives(self, n: int = 10) -> List[tuple]:
+        return sorted(self.collectives, key=lambda t: -t[4])[:n]
+
+
+def analyze(text: str, n_devices: int = 1) -> HLOReport:
+    comps = parse_hlo(text)
+    counts = execution_counts(comps)
+    shapes: Dict[str, str] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            shapes[ins.name] = ins.type_str
+
+    fusion_bodies = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode == "fusion":
+                tgt = _attr_comp(ins.rest, "calls")
+                if tgt:
+                    fusion_bodies.add(tgt)
+
+    rep = HLOReport()
+    for comp in comps.values():
+        execs = counts.get(comp.name, 0.0)
+        if execs <= 0 or comp.name in fusion_bodies:
+            continue
+        for ins in comp.instrs:
+            op = ins.opcode
+            if op == "while":
+                rep.n_while += 1
+                rep.trip_counts.append(_trip_count(ins, comps))
+            if op in ("dot", "convolution"):
+                out_elems = _shape_elems(ins.type_str)
+                k = _contraction_size(ins, shapes)
+                rep.dot_flops += 2.0 * out_elems * k * execs
+            rep.hbm_bytes += _traffic_bytes(ins, shapes, comps) * execs
+            base_op = op.replace("-start", "")
+            if base_op in COLLECTIVES:
+                size = _shape_bytes(ins.type_str)
+                g = _group_size(ins.rest, n_devices)
+                if base_op == "all-reduce":
+                    wire = 2.0 * size * (g - 1) / max(g, 1)
+                elif base_op == "all-gather":
+                    wire = size * (g - 1) / max(g, 1)
+                elif base_op == "reduce-scatter":
+                    wire = size * (g - 1)
+                elif base_op == "all-to-all":
+                    wire = size * (g - 1) / max(g, 1)
+                else:
+                    wire = size
+                rep.collective_wire_bytes += wire * execs
+                rep.collective_breakdown[base_op] = \
+                    rep.collective_breakdown.get(base_op, 0.0) + wire * execs
+                rep.collective_count += 1
+                mmeta = re.search(r'op_name="([^"]*)"', ins.rest)
+                shape_m = _SHAPE_RE.search(ins.type_str)
+                rep.collectives.append(
+                    (base_op,
+                     shape_m.group(0) if shape_m else "?", g, execs,
+                     wire * execs,
+                     (mmeta.group(1)[-80:] if mmeta else "")))
+    return rep
+
+
+def _traffic_bytes(ins: Instr, shapes: Dict[str, str],
+                   comps: Dict[str, Computation]) -> float:
+    op = ins.opcode
+    if op in ("parameter", "constant", "tuple", "get-tuple-element",
+              "bitcast", "copy", "while", "", "iota", "after-all",
+              "custom-call", "partition-id", "replica-id"):
+        return 0.0
+    if op == "dynamic-update-slice" and len(ins.operands) >= 2:
+        return 2.0 * _shape_bytes(shapes.get(ins.operands[1], ""))
+    if op == "fusion":
+        body = comps.get(_attr_comp(ins.rest, "calls") or "")
+        if body is not None and body.root is not None:
+            if body.root.opcode == "dynamic-update-slice" and \
+                    len(body.root.operands) >= 2:
+                upd = _shape_bytes(shapes.get(body.root.operands[1], ""))
+                return 2.0 * upd
+    rb = _shape_bytes(ins.type_str)
+    if op in _FULL_READ_OPS:
+        return rb + sum(_shape_bytes(shapes.get(o, ""))
+                        for o in ins.operands)
+    reads = sum(min(_shape_bytes(shapes.get(o, "")), rb)
+                for o in ins.operands)
+    return rb + reads
+
+
+def _contraction_size(ins: Instr, shapes: Dict[str, str]) -> float:
+    m = re.search(r"lhs_contracting_dims=\{([\d,\s]*)\}", ins.rest)
+    if not m or not ins.operands:
+        if ins.operands and len(ins.operands) >= 2:
+            kshape = shapes.get(ins.operands[1], "")
+            sm = _SHAPE_RE.search(kshape)
+            if sm and sm.group(2):
+                dims = [int(d) for d in sm.group(2).split(",")]
+                out_f = max(dims) if dims else 1
+                total = 1
+                for d in dims:
+                    total *= d
+                return total / max(out_f, 1)
+        return 1.0
+    dims_idx = [int(d) for d in m.group(1).split(",") if d.strip()]
+    lhs_shape = shapes.get(ins.operands[0], "")
+    sm = _SHAPE_RE.search(lhs_shape)
+    if not sm or not sm.group(2):
+        return 1.0
+    dims = [int(d) for d in sm.group(2).split(",")]
+    k = 1.0
+    for i in dims_idx:
+        if i < len(dims):
+            k *= dims[i]
+    return k

@@ -1,0 +1,119 @@
+"""Three-term roofline report from a compiled dry-run artifact.
+
+  compute    = FLOPs / (peak FLOP/s)          [per chip; SPMD program]
+  memory     = HBM bytes / HBM bandwidth
+  collective = wire bytes / ICI link bandwidth
+
+FLOPs/bytes come from the trip-count-aware HLO walk
+(:mod:`repro.roofline.hlo_analysis`); XLA's own cost_analysis numbers are
+reported alongside for reference (they undercount scan bodies).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+from repro.core.hardware import DEFAULT_CHIP, ChipSpec
+from .hlo_analysis import analyze
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    # per-device quantities
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    # seconds
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    # model-level accounting
+    model_flops: float            # 6·N_active·tokens (train) / 2·N·tokens
+    useful_ratio: float           # model_flops / (flops × devices)
+    step_time_s: float            # max of the three terms (no overlap)
+    roofline_frac: float          # compute_s / step_time_s
+    # memory fit
+    bytes_per_device: int = 0
+    fits_hbm: bool = True
+    # raw XLA numbers for reference
+    xla_flops: float = 0.0
+    xla_bytes: float = 0.0
+    collective_breakdown: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    trip_counts: tuple = ()
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["trip_counts"] = list(self.trip_counts)[:12]
+        return d
+
+
+def roofline_from_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                           n_devices: int, model_flops_global: float,
+                           chip: ChipSpec = DEFAULT_CHIP) -> RooflineTerms:
+    hlo = analyze(compiled.as_text(), n_devices=n_devices)
+    ca = {}
+    try:
+        ca = compiled.cost_analysis() or {}
+    except Exception:
+        pass
+    mem_stats = None
+    try:
+        mem_stats = compiled.memory_analysis()
+    except Exception:
+        pass
+    bytes_per_device = 0
+    if mem_stats is not None:
+        bytes_per_device = int(
+            getattr(mem_stats, "argument_size_in_bytes", 0)
+            + getattr(mem_stats, "temp_size_in_bytes", 0)
+            + getattr(mem_stats, "output_size_in_bytes", 0)
+            - getattr(mem_stats, "alias_size_in_bytes", 0))
+
+    compute_s = hlo.dot_flops / chip.peak_flops_bf16
+    memory_s = hlo.hbm_bytes / chip.hbm_bw
+    collective_s = hlo.collective_wire_bytes / chip.ici_bw_per_link
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    step = max(compute_s, memory_s, collective_s)
+    model_flops_dev = model_flops_global / max(n_devices, 1)
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, n_devices=n_devices,
+        flops=hlo.dot_flops, hbm_bytes=hlo.hbm_bytes,
+        wire_bytes=hlo.collective_wire_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops_global,
+        useful_ratio=(model_flops_dev / hlo.dot_flops
+                      if hlo.dot_flops else 0.0),
+        step_time_s=step,
+        roofline_frac=(model_flops_dev / chip.peak_flops_bf16) / step
+        if step > 0 else 0.0,
+        bytes_per_device=bytes_per_device,
+        fits_hbm=bytes_per_device <= chip.hbm_bytes,
+        xla_flops=float(ca.get("flops", 0.0)),
+        xla_bytes=float(ca.get("bytes accessed", 0.0)),
+        collective_breakdown=dict(hlo.collective_breakdown),
+        trip_counts=tuple(hlo.trip_counts),
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N_active·D_tokens for training, 2·N_active·tokens for
+    one decode step, 2·N_active·tokens for prefill."""
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence (+ attention over the cache, excluded
+    # from the 2ND model-flops convention)
+    return 2.0 * n_act * shape.global_batch

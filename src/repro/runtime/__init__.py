@@ -1,0 +1,5 @@
+from .ft import (ElasticTrainer, FailureEvent, FailureInjector,
+                 StragglerPolicy, TrainLoopConfig)
+
+__all__ = ["ElasticTrainer", "FailureEvent", "FailureInjector",
+           "StragglerPolicy", "TrainLoopConfig"]

@@ -1,0 +1,177 @@
+"""Fault tolerance, elastic scaling, straggler mitigation.
+
+Design (1000+-node posture, simulated faithfully on one process):
+
+* **Failure detection** — every step ends with a heartbeat check. In a
+  real deployment this is the JAX distributed runtime noticing a missing
+  host; here a :class:`FailureInjector` raises on scheduled steps, which
+  exercises the identical recovery path.
+* **Checkpoint/restart** — :class:`repro.checkpoint.Checkpointer` commits
+  atomically every ``ckpt_every`` steps; recovery restores the latest
+  committed step and *replays data deterministically* from the step
+  counter (the pipeline is (seed, step)-addressable, so no data state is
+  checkpointed).
+* **Elastic scaling** — on host loss the trainer shrinks the data axis
+  (e.g. 16→8 shards), reshards the same checkpoint onto the smaller
+  topology (restore is host-count agnostic), rebuilds the jitted step for
+  the new mesh, and continues with the same global batch (more per-host
+  rows) or a proportionally smaller one.
+* **Straggler mitigation** — per-step deadline tracking with an EWMA of
+  step time; a step exceeding ``straggler_factor ×`` the EWMA is logged
+  and counted; after ``straggler_patience`` consecutive slow steps the
+  trainer treats the host set as degraded and triggers the elastic path
+  (in simulation: records the decision). Synchronous SGD makes "skip the
+  slow host" equivalent to elastic re-sharding, which is what we do.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+
+class FailureEvent(RuntimeError):
+    def __init__(self, step: int, kind: str, lost_hosts: int = 1):
+        super().__init__(f"simulated {kind} at step {step}")
+        self.step = step
+        self.kind = kind
+        self.lost_hosts = lost_hosts
+
+
+class FailureInjector:
+    """Deterministic fault schedule: {step: (kind, lost_hosts)}."""
+
+    def __init__(self, schedule: Optional[Dict[int, Any]] = None):
+        self.schedule = dict(schedule or {})
+        self.fired: List[int] = []
+
+    def check(self, step: int):
+        ev = self.schedule.get(step)
+        if ev is not None and step not in self.fired:
+            self.fired.append(step)
+            kind, lost = ev if isinstance(ev, tuple) else (ev, 1)
+            raise FailureEvent(step, kind, lost)
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    factor: float = 3.0          # slow if step_time > factor × EWMA
+    patience: int = 3            # consecutive slow steps before action
+    ewma: float = 0.1
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    keep: int = 3
+    min_shards: int = 1
+    straggler: StragglerPolicy = dataclasses.field(
+        default_factory=StragglerPolicy)
+
+
+class ElasticTrainer:
+    """Synchronous data-parallel training loop with recovery.
+
+    ``build_step(num_shards)`` returns (step_fn, pipeline) for the current
+    topology — rebuilt after elastic events. The loop owns (params,
+    opt_state) as host arrays in simulation.
+    """
+
+    def __init__(self, cfg: TrainLoopConfig, build_step: Callable,
+                 params, opt_state, *, num_shards: int,
+                 injector: Optional[FailureInjector] = None,
+                 checkpointer=None):
+        from repro.checkpoint import Checkpointer
+        self.cfg = cfg
+        self.build_step = build_step
+        self.params = params
+        self.opt_state = opt_state
+        self.num_shards = num_shards
+        self.injector = injector or FailureInjector()
+        self.ckpt = checkpointer or Checkpointer(cfg.ckpt_dir, keep=cfg.keep)
+        self.log: List[Dict[str, Any]] = []
+        self.losses: List[float] = []
+        self.step = 0
+        self._ewma_time: Optional[float] = None
+        self._slow_streak = 0
+        self.recoveries = 0
+        self.elastic_events: List[Dict[str, Any]] = []
+
+    # -- main loop -----------------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        step_fn, pipeline = self.build_step(self.num_shards)
+        while self.step < self.cfg.total_steps:
+            try:
+                t0 = time.perf_counter()
+                self.injector.check(self.step)
+                batch = pipeline.batch_at(self.step)
+                self.params, self.opt_state, loss = step_fn(
+                    self.params, self.opt_state, batch)
+                dt = time.perf_counter() - t0
+                self._track_straggler(dt)
+                self.losses.append(float(loss))
+                if (self.step + 1) % self.cfg.ckpt_every == 0:
+                    self._checkpoint()
+                self.step += 1
+            except FailureEvent as ev:
+                step_fn, pipeline = self._recover(ev)
+        self.ckpt.wait()
+        self._checkpoint(sync=True)
+        return {"losses": self.losses, "recoveries": self.recoveries,
+                "elastic_events": self.elastic_events,
+                "final_step": self.step,
+                "straggler_flags": [e for e in self.log
+                                    if e.get("straggler")]}
+
+    # -- recovery -------------------------------------------------------------------
+    def _recover(self, ev: FailureEvent):
+        self.recoveries += 1
+        new_shards = max(self.num_shards - ev.lost_hosts,
+                         self.cfg.min_shards)
+        self.elastic_events.append(
+            {"step": ev.step, "kind": ev.kind,
+             "shards": (self.num_shards, new_shards)})
+        self.num_shards = new_shards
+        # restore the last committed state; data replays deterministically
+        self.ckpt.wait()
+        restored_step = self.ckpt.latest_step()
+        if restored_step is not None:
+            (self.params, self.opt_state), extra = self.ckpt.restore(
+                (self.params, self.opt_state))
+            self.step = int(extra.get("step", restored_step))
+            # drop loss history past the restore point (recomputed)
+            self.losses = self.losses[:self.step]
+        else:
+            self.step = 0
+            self.losses = []
+        return self.build_step(self.num_shards)
+
+    def _checkpoint(self, sync: bool = False):
+        self.ckpt.save(self.step + 1, (self.params, self.opt_state),
+                       extra={"step": self.step + 1},
+                       async_=not sync)
+
+    # -- stragglers ------------------------------------------------------------------
+    def _track_straggler(self, dt: float):
+        pol = self.cfg.straggler
+        if self._ewma_time is None:
+            self._ewma_time = dt
+            return
+        slow = dt > pol.factor * self._ewma_time
+        self.log.append({"step": self.step, "dt": dt, "straggler": slow})
+        if slow:
+            self._slow_streak += 1
+            if self._slow_streak >= pol.patience:
+                self.elastic_events.append(
+                    {"step": self.step, "kind": "straggler_degrade",
+                     "shards": (self.num_shards, self.num_shards)})
+                self._slow_streak = 0
+        else:
+            self._slow_streak = 0
+            self._ewma_time = (1 - pol.ewma) * self._ewma_time \
+                + pol.ewma * dt

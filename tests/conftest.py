@@ -1,0 +1,14 @@
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see ONE device.
+# Multi-device tests spawn subprocesses with their own flags.
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

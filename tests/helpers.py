@@ -1,0 +1,44 @@
+"""Shared test utilities: random term generation + reference evaluation."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.ir import EVAL_FNS
+
+VARS = ("a", "b", "c", "d")
+
+
+def eval_term(term, env):
+    """Evaluate a nested-tuple term with numpy semantics."""
+    op = term[0]
+    if op == "const":
+        return term[1]
+    if op == "var":
+        return env[term[1]]
+    if op == "call":
+        raise NotImplementedError
+    args = [eval_term(t, env) for t in term[1:]]
+    return EVAL_FNS[op](*args)
+
+
+def random_term(rng: np.random.Generator, depth: int,
+                ops=("add", "sub", "mul", "fma", "neg")):
+    """Random expression over VARS + small constants (mul/add/sub/fma/neg
+    — the closure the paper's rule set touches)."""
+    if depth <= 0 or rng.random() < 0.3:
+        if rng.random() < 0.3:
+            return ("const", float(rng.integers(-3, 4)))
+        return ("var", VARS[rng.integers(0, len(VARS))])
+    op = ops[rng.integers(0, len(ops))]
+    if op == "neg":
+        return ("neg", random_term(rng, depth - 1, ops))
+    if op == "fma":
+        return ("fma", random_term(rng, depth - 1, ops),
+                random_term(rng, depth - 1, ops),
+                random_term(rng, depth - 1, ops))
+    return (op, random_term(rng, depth - 1, ops),
+            random_term(rng, depth - 1, ops))
+
+
+def random_env(rng: np.random.Generator):
+    return {v: float(rng.normal()) for v in VARS}

@@ -1,0 +1,131 @@
+"""E-graph invariants: hash-consing, union-find, congruence closure.
+
+Property tests (hypothesis) assert the egg invariants the paper's §II-D
+relies on: canonical hashcons keys, congruence after rebuild, and
+semantic soundness of saturation (every extractable term evaluates equal
+to the original)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.egraph import EGraph, add_expr, extract_to_term
+from repro.core.ir import ENode
+from repro.core.rules import PAPER_RULES, run_rules
+
+from helpers import eval_term, random_env, random_term
+
+
+def test_hashcons_dedup():
+    eg = EGraph()
+    a1 = add_expr(eg, ("add", ("var", "x"), ("var", "y")))
+    a2 = add_expr(eg, ("add", ("var", "x"), ("var", "y")))
+    assert a1 == a2
+    assert eg.num_nodes() == 3  # x, y, add
+
+
+def test_union_find_merge():
+    eg = EGraph()
+    x = add_expr(eg, ("var", "x"))
+    y = add_expr(eg, ("var", "y"))
+    assert eg.find(x) != eg.find(y)
+    eg.union(x, y)
+    assert eg.find(x) == eg.find(y)
+
+
+def test_congruence_closure():
+    # f(a), f(b): union(a, b) must congruence-merge f(a) and f(b)
+    eg = EGraph()
+    a = add_expr(eg, ("var", "a"))
+    b = add_expr(eg, ("var", "b"))
+    fa = eg.add(ENode("neg", (a,)))
+    fb = eg.add(ENode("neg", (b,)))
+    assert eg.find(fa) != eg.find(fb)
+    eg.union(a, b)
+    eg.rebuild()
+    assert eg.find(fa) == eg.find(fb)
+
+
+def test_congruence_transitive():
+    eg = EGraph()
+    a = add_expr(eg, ("var", "a"))
+    b = add_expr(eg, ("var", "b"))
+    fa = eg.add(ENode("neg", (a,)))
+    fb = eg.add(ENode("neg", (b,)))
+    gfa = eg.add(ENode("exp", (fa,)))
+    gfb = eg.add(ENode("exp", (fb,)))
+    eg.union(a, b)
+    eg.rebuild()
+    assert eg.find(gfa) == eg.find(gfb)
+
+
+def test_int_float_consts_distinct():
+    eg = EGraph()
+    ci = add_expr(eg, ("const", 0))
+    cf = add_expr(eg, ("const", 0.0))
+    assert eg.find(ci) != eg.find(cf)
+
+
+def test_const_fold_analysis():
+    eg = EGraph()
+    r = add_expr(eg, ("mul", ("const", 3.0), ("const", 4.0)))
+    eg.rebuild()
+    const12 = add_expr(eg, ("const", 12.0))
+    assert eg.find(r) == eg.find(const12)
+
+
+def test_comm_assoc_equates():
+    eg = EGraph()
+    t1 = add_expr(eg, ("mul", ("mul", ("var", "a"), ("var", "b")),
+                       ("var", "c")))
+    t2 = add_expr(eg, ("mul", ("var", "c"),
+                       ("mul", ("var", "b"), ("var", "a"))))
+    run_rules(eg, PAPER_RULES)
+    assert eg.find(t1) == eg.find(t2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 10_000))
+def test_saturation_sound(seed):
+    """Extracted term after saturation evaluates equal to the input."""
+    rng = np.random.default_rng(seed)
+    term = random_term(rng, depth=3)
+    env = random_env(rng)
+    want = eval_term(term, env)
+    eg = EGraph()
+    root = add_expr(eg, term)
+    run_rules(eg, PAPER_RULES, iter_limit=6, node_limit=3000,
+              time_limit_s=3.0)
+    res = eg.extract(root)
+    got = eval_term(res.term(eg), env)
+    np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000))
+def test_rebuild_idempotent_and_canonical(seed):
+    rng = np.random.default_rng(seed)
+    eg = EGraph()
+    roots = [add_expr(eg, random_term(rng, depth=3)) for _ in range(3)]
+    run_rules(eg, PAPER_RULES, iter_limit=4, node_limit=2000)
+    eg.rebuild()
+    n1 = eg.num_nodes()
+    eg.rebuild()
+    assert eg.num_nodes() == n1
+    # every hashcons key must be canonical
+    for node, cid in eg.hashcons.items():
+        assert eg.canonicalize(node) == node or \
+            eg.find(eg.hashcons[eg.canonicalize(node)]) == eg.find(cid)
+
+
+def test_node_limit_respected():
+    eg = EGraph()
+    t = ("add", ("var", "a"), ("var", "b"))
+    for _ in range(6):
+        t = ("add", t, ("mul", t, ("var", "c")))
+    add_expr(eg, t)
+    rep = run_rules(eg, PAPER_RULES, iter_limit=50, node_limit=500,
+                    time_limit_s=10.0)
+    assert rep.stop_reason in ("node_limit", "saturated", "time_limit")
+    # rebuild may dedup below the limit after the stop fires; the graph
+    # must never grow far beyond it
+    assert eg.num_nodes() <= 2 * 500

@@ -1,0 +1,170 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step
+on CPU asserting output shapes + no NaNs, plus prefill↔decode consistency
+against the full-sequence logits."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, applicable, cells, get_config, \
+    get_smoke_config
+from repro.models import get_model
+
+
+def _batch(cfg, B=2, S=32, seed=1):
+    kt, kl, kf = jax.random.split(jax.random.PRNGKey(seed), 3)
+    batch = {
+        "tokens": jax.random.randint(kt, (B, S), 0, cfg.vocab),
+        "labels": jax.random.randint(kl, (B, S), 0, cfg.vocab),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(kf, (B, S, cfg.d_model),
+                                            jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _batch(cfg, B, S)
+    if cfg.family == "encdec":
+        logits, cache = model.prefill(params, batch["tokens"],
+                                      batch["frames"])
+    else:
+        logits, cache = model.prefill(params, batch["tokens"])
+    assert logits.shape == (B, 1, cfg.vocab)
+    tok = batch["labels"][:, :1]
+    logits2, cache2 = model.decode_step(params, cache, tok)
+    assert logits2.shape == (B, 1, cfg.vocab)
+    assert np.isfinite(np.asarray(logits2)).all()
+    assert int(cache2["pos"]) == S + 1
+
+
+@pytest.mark.parametrize("arch", ["minitron_4b", "qwen2_vl_2b",
+                                  "mamba2_1p3b", "dbrx_132b",
+                                  "zamba2_2p7b"])
+def test_prefill_matches_full_forward(arch):
+    """Last-position prefill logits == full forward logits at last pos."""
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, cfg.vocab)
+    full = model.logits(params, tokens)
+    pre, _ = model.prefill(params, tokens)
+    np.testing.assert_allclose(np.asarray(pre[:, 0]),
+                               np.asarray(full[:, -1]), atol=2e-2,
+                               rtol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["minitron_4b", "mamba2_1p3b",
+                                  "zamba2_2p7b"])
+def test_decode_matches_teacher_forcing(arch):
+    """decode_step over a prompt reproduces full-forward logits stepwise."""
+    cfg = get_smoke_config(arch)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (B, S), 0, cfg.vocab)
+    full = np.asarray(model.logits(params, tokens))
+    pre_len = 4
+    logits, cache = model.prefill(params, tokens[:, :pre_len])
+    np.testing.assert_allclose(np.asarray(logits)[:, 0],
+                               full[:, pre_len - 1], atol=3e-2, rtol=3e-2)
+    for t in range(pre_len, S):
+        logits, cache = model.decode_step(params, cache, tokens[:, t:t + 1])
+        np.testing.assert_allclose(np.asarray(logits)[:, 0], full[:, t],
+                                   atol=3e-2, rtol=3e-2,
+                                   err_msg=f"step {t}")
+
+
+def test_cells_enumeration():
+    cs = cells()
+    assert len(cs) == 40
+    runnable = [c for c in cs if c[2]]
+    skipped = [c for c in cs if not c[2]]
+    assert len(skipped) == 8  # long_500k × pure-attention archs
+    assert all(c[1] == "long_500k" for c in skipped)
+    for arch in ("mamba2_1p3b", "zamba2_2p7b"):
+        assert any(c[0] == arch and c[1] == "long_500k" and c[2]
+                   for c in cs)
+
+
+def test_param_counts_sane():
+    expect = {
+        "minitron_4b": (4e9, 6e9), "mistral_nemo_12b": (11e9, 13.5e9),
+        "mistral_large_123b": (115e9, 130e9), "granite_8b": (7e9, 9e9),
+        "mamba2_1p3b": (1.1e9, 1.6e9), "qwen2_vl_2b": (1.3e9, 1.8e9),
+        "dbrx_132b": (125e9, 140e9), "arctic_480b": (450e9, 500e9),
+        "whisper_small": (0.2e9, 0.35e9), "zamba2_2p7b": (2.0e9, 3.0e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    dbrx = get_config("dbrx_132b")
+    arctic = get_config("arctic_480b")
+    assert dbrx.active_param_count() < 0.35 * dbrx.param_count()
+    assert arctic.active_param_count() < 0.05 * arctic.param_count()
+
+
+def test_vlm_mrope_positions():
+    """Vision-style 3-axis positions change the logits (M-RoPE active)."""
+    cfg = get_smoke_config("qwen2_vl_2b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, cfg.vocab)
+    text_pos = jnp.broadcast_to(jnp.arange(S)[None, None], (3, B, S))
+    img_pos = text_pos.at[1].set(text_pos[1] * 2).at[2].set(text_pos[2] * 3)
+    h1, _ = model.forward(params, tokens, text_pos)
+    h2, _ = model.forward(params, tokens, img_pos)
+    assert not np.allclose(np.asarray(h1, np.float32),
+                           np.asarray(h2, np.float32))
+
+
+def test_hybrid_shared_block_is_tied():
+    """zamba2's shared attention params are one block, reused."""
+    cfg = get_smoke_config("zamba2_2p7b")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    assert "shared" in params
+    # layer stack has no attention weights of its own
+    assert "attn" not in params["layers"]
+
+
+def test_f8_kv_cache_decode():
+    """fp8 KV cache (100B+ serving option): decode tracks the bf16-cache
+    full-forward logits within fp8 quantization tolerance."""
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke_config("mistral_large_123b"),
+                              kv_cache_dtype="f8")
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (1, 10), 0,
+                                cfg.vocab)
+    full = np.asarray(model.logits(params, tokens))
+    logits, cache = model.prefill(params, tokens[:, :4])
+    assert str(cache["k"].dtype) == "float8_e4m3fn"
+    errs = []
+    for t in range(4, 10):
+        logits, cache = model.decode_step(params, cache, tokens[:, t:t + 1])
+        errs.append(np.abs(np.asarray(logits)[:, 0] - full[:, t]).max())
+    assert max(errs) < 0.35 * np.abs(full).max()

@@ -1,0 +1,150 @@
+"""Rule soundness (Table I) + extraction quality (CSE-aware DAG cost)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost import CostModel, TPUCostModel, count_ops
+from repro.core.egraph import EGraph, add_expr
+from repro.core.extract import dag_cost_of, extract_dag, extract_exact
+from repro.core.rules import (EXTENDED_RULES, PAPER_RULES, run_rules)
+
+from helpers import eval_term, random_env, random_term
+
+
+# -- per-rule semantic soundness ---------------------------------------------------
+@pytest.mark.parametrize("rule", PAPER_RULES + EXTENDED_RULES,
+                         ids=lambda r: r.name)
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_rule_sound(rule, seed):
+    """lhs and rhs evaluate identically under random bindings."""
+    rng = np.random.default_rng(seed)
+    env = {}
+
+    def to_term(pat):
+        from repro.core.egraph import PatVar
+        if isinstance(pat, PatVar):
+            if pat.name not in env:
+                env[pat.name] = float(rng.normal()) or 0.7
+            return ("var", pat.name)
+        return (pat.op,) + tuple(to_term(c) for c in pat.children)
+
+    lhs = to_term(rule.lhs)
+    rhs = to_term(rule.rhs)
+    np.testing.assert_allclose(eval_term(lhs, env), eval_term(rhs, env),
+                               rtol=1e-9)
+
+
+def test_fma_formed():
+    eg = EGraph()
+    root = add_expr(eg, ("add", ("var", "x"),
+                         ("mul", ("var", "y"), ("var", "z"))))
+    run_rules(eg, PAPER_RULES)
+    res = eg.extract(root)
+    assert res.term(eg)[0] == "fma"
+
+
+def test_fma_sub_variants():
+    for term, sign in [
+            (("sub", ("var", "a"), ("mul", ("var", "b"), ("var", "c"))), 1),
+            (("sub", ("mul", ("var", "b"), ("var", "c")), ("var", "a")), 2)]:
+        eg = EGraph()
+        root = add_expr(eg, term)
+        run_rules(eg, PAPER_RULES)
+        # FMA2/3 cost-TIE with sub+mul under the paper model (fma+neg =
+        # 20 = sub+mul); the TPU model folds the sign flip for free, so
+        # the FMA form strictly wins — use it here.
+        res = eg.extract(root, cost_model=TPUCostModel())
+        ops = set()
+
+        def walk(t):
+            ops.add(t[0])
+            for c in t[1:]:
+                if isinstance(c, tuple):
+                    walk(c)
+        walk(res.term(eg))
+        assert "fma" in ops
+
+
+def test_extraction_beats_or_matches_tree():
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        term = random_term(rng, 4)
+        eg = EGraph()
+        root = add_expr(eg, term)
+        run_rules(eg, PAPER_RULES, iter_limit=5, node_limit=2000)
+        res = extract_dag(eg, root)
+        assert res.dag_cost <= res.tree_cost + 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000))
+def test_local_search_matches_bruteforce(seed):
+    """On tiny graphs the hill-climbing extractor (our ILP stand-in) finds
+    the brute-force optimum."""
+    rng = np.random.default_rng(seed)
+    term = random_term(rng, 2)
+    eg = EGraph()
+    root = add_expr(eg, term)
+    run_rules(eg, PAPER_RULES, iter_limit=3, node_limit=60)
+    try:
+        exact = extract_exact(eg, root, max_combos=50_000)
+    except ValueError:
+        pytest.skip("graph too large for brute force")
+    ours = extract_dag(eg, root, time_limit_s=10.0)
+    assert ours.dag_cost <= exact.dag_cost + 1e-9 or \
+        abs(ours.dag_cost - exact.dag_cost) < 1e-6
+
+
+def test_cse_counted_once():
+    # (a+b)*(a+b): DAG cost counts a+b once
+    eg = EGraph()
+    ab = ("add", ("var", "a"), ("var", "b"))
+    root = add_expr(eg, ("mul", ab, ab))
+    res = extract_dag(eg, root)
+    cm = CostModel()
+    # vars 2×1 + add 10 + mul 10 = 22
+    assert res.dag_cost == pytest.approx(22.0)
+    assert res.tree_cost == pytest.approx(34.0)
+
+
+def test_multi_root_sharing():
+    eg = EGraph()
+    bc = ("mul", ("var", "b"), ("var", "c"))
+    r1 = add_expr(eg, ("add", ("var", "a"), bc))
+    r2 = add_expr(eg, ("mul", bc, ("var", "d")))
+    res = extract_dag(eg, (r1, r2))
+    # a,b,c,d + mul(b,c) + add + mul = 4 + 30
+    assert res.dag_cost == pytest.approx(34.0)
+
+
+def test_cost_model_paper_values():
+    cm = CostModel()
+    from repro.core.ir import ENode
+    assert cm.node_cost(ENode("const", (), 1.0)) == 0
+    assert cm.node_cost(ENode("var", (), "x")) == 1
+    assert cm.node_cost(ENode("phi", (0, 1, 2))) == 1
+    assert cm.node_cost(ENode("add", (0, 1))) == 10
+    assert cm.node_cost(ENode("div", (0, 1))) == 100
+    assert cm.node_cost(ENode("mod", (0, 1))) == 100
+    assert cm.node_cost(ENode("load", (0,))) == 100
+    assert cm.node_cost(ENode("call", (0,), "f")) == 100
+
+
+def test_tpu_cost_model_transcendentals():
+    cm = TPUCostModel()
+    from repro.core.ir import ENode
+    assert cm.node_cost(ENode("exp", (0,))) == 40
+    assert cm.node_cost(ENode("rsqrt", (0,))) == 20
+    assert cm.node_cost(ENode("add", (0, 1))) == 10
+
+
+def test_extraction_acyclic():
+    rng = np.random.default_rng(7)
+    term = random_term(rng, 4)
+    eg = EGraph()
+    root = add_expr(eg, term)
+    run_rules(eg, PAPER_RULES, iter_limit=6, node_limit=3000)
+    res = extract_dag(eg, root)
+    cost = dag_cost_of(eg, CostModel(), res.choice, res.roots)
+    assert np.isfinite(cost)

@@ -1,0 +1,97 @@
+"""End-to-end system behaviour: the paper's claims validated on the
+framework level (benchmark ablation direction, saturated kernels inside a
+real train step, dry-run artifacts)."""
+import json
+import pathlib
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import MODES, SaturatorConfig, saturate_all_modes
+
+
+def test_paper_claim_direction_on_suite():
+    """ACCSAT never worse than CSE, CSE never worse than baseline, on the
+    paper cost model — the Fig. 2 ordering."""
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).parents[1]))
+    from benchmarks.kernel_suite import SUITE
+    for name, mk in SUITE.items():
+        ks = saturate_all_modes(mk())
+        base = ks["baseline"].kernel.stats
+        cse = ks["cse"].kernel.stats
+        acc = ks["accsat"].kernel.stats
+        assert cse.n_loads <= base.n_loads, name
+        assert cse.n_ops <= base.n_ops, name
+        assert ks["accsat"].extraction.dag_cost <= \
+            ks["cse"].extraction.dag_cost + 1e-9, name
+        # SAT forms FMAs somewhere in the suite
+    total_fma = sum(saturate_all_modes(mk())["accsat"].kernel.stats.n_fma
+                    for mk in list(SUITE.values())[:3])
+    assert total_fma > 0
+
+
+def test_ep_fma_like_paper():
+    """Paper §VIII: EP executes more FMA and fewer total ops under SAT."""
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).parents[1]))
+    from benchmarks.kernel_suite import ep_like
+    ks = saturate_all_modes(ep_like())
+    assert ks["cse_sat"].kernel.stats.n_fma > ks["cse"].kernel.stats.n_fma
+    assert ks["cse_sat"].kernel.stats.n_ops < ks["cse"].kernel.stats.n_ops
+
+
+def test_saturated_kernels_run_inside_jitted_train_step(tmp_path):
+    """The saturator's generated code is live inside the real train path
+    (rmsnorm/swiglu/rotary/adamw all route through generated kernels)."""
+    from repro.launch.train import build_trainer
+    tr = build_trainer("zamba2-2.7b", smoke=True, steps=4, batch=2,
+                       seq=32, ckpt_dir=str(tmp_path))
+    out = tr.run()
+    assert np.isfinite(out["losses"]).all()
+
+
+def test_dryrun_artifacts_complete():
+    """All 40 cells × 2 meshes are present: ok or documented skip."""
+    d = pathlib.Path(__file__).parents[1] / "experiments" / "dryrun"
+    if not d.exists():
+        pytest.skip("dry-run artifacts not generated yet")
+    files = list(d.glob("*.json"))
+    if len(files) < 80:
+        pytest.skip(f"dry-run sweep incomplete ({len(files)}/80)")
+    bad = []
+    for p in files:
+        doc = json.loads(p.read_text())
+        if doc.get("status") == "error":
+            bad.append(p.stem)
+        elif doc.get("status") == "skipped":
+            assert "quadratic" in doc["reason"]
+    assert not bad, bad
+
+
+# Cells on the two largest models that remain above 16 GiB/device after
+# the §Perf iterations; each has a root-cause + next-lever analysis in
+# EXPERIMENTS.md §Open items (deferred grad reduction, int8 KV cache,
+# activation offload / PP). This guard pins the set so regressions on the
+# 57 fitting cells are caught.
+KNOWN_OVER_HBM = {
+    "arctic_480b_decode_32k_sp", "arctic_480b_prefill_32k_sp",
+    "arctic_480b_train_4k_sp", "arctic_480b_train_4k_mp",
+    "mistral_large_123b_prefill_32k_sp",
+    "mistral_large_123b_train_4k_sp",
+}
+
+
+def test_dryrun_memory_fits():
+    d = pathlib.Path(__file__).parents[1] / "experiments" / "dryrun"
+    if not d.exists() or len(list(d.glob("*.json"))) < 80:
+        pytest.skip("dry-run artifacts incomplete")
+    over = []
+    for p in d.glob("*.json"):
+        doc = json.loads(p.read_text())
+        if doc.get("status") == "ok" and \
+                not doc["roofline"]["fits_hbm"]:
+            over.append(p.stem)
+    unexpected = set(over) - KNOWN_OVER_HBM
+    assert not unexpected, f"NEW cells over HBM: {sorted(unexpected)}"

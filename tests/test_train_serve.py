@@ -1,0 +1,72 @@
+"""End-to-end training (loss decreases, elastic recovery, determinism) and
+serving (continuous batching) on smoke configs."""
+import numpy as np
+import jax
+import pytest
+
+from repro.launch.train import build_trainer
+from repro.launch.serve import Request, Server
+
+
+def test_train_loss_decreases(tmp_path):
+    tr = build_trainer("minitron-4b", smoke=True, steps=20, batch=8,
+                       seq=64, ckpt_dir=str(tmp_path), lr=1e-3)
+    out = tr.run()
+    losses = out["losses"]
+    assert len(losses) == 20
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_train_recovers_from_failure(tmp_path):
+    tr = build_trainer("granite-8b", smoke=True, steps=16, batch=4,
+                       seq=32, ckpt_dir=str(tmp_path),
+                       inject={9: ("node_loss", 1)})
+    out = tr.run()
+    assert out["recoveries"] == 1
+    assert out["final_step"] == 16
+    assert out["elastic_events"][0]["kind"] == "node_loss"
+    assert np.isfinite(out["losses"]).all()
+
+
+def test_train_failure_replay_matches_clean_run(tmp_path):
+    """Deterministic data replay: a run interrupted+recovered converges to
+    the same losses as an uninterrupted run (same seeds, same steps)."""
+    t1 = build_trainer("qwen2-vl-2b", smoke=True, steps=12, batch=4,
+                       seq=32, ckpt_dir=str(tmp_path / "a"), seed=5)
+    clean = t1.run()["losses"]
+    t2 = build_trainer("qwen2-vl-2b", smoke=True, steps=12, batch=4,
+                       seq=32, ckpt_dir=str(tmp_path / "b"), seed=5,
+                       inject={7: ("node_loss", 1)})
+    recovered = t2.run()["losses"]
+    # after recovery the replayed steps recompute identical losses
+    np.testing.assert_allclose(clean, recovered, rtol=2e-3, atol=2e-3)
+
+
+def test_train_with_compression(tmp_path):
+    tr = build_trainer("minitron-4b", smoke=True, steps=10, batch=4,
+                       seq=32, ckpt_dir=str(tmp_path), compress="int8_ef",
+                       lr=1e-3)
+    out = tr.run()
+    assert np.isfinite(out["losses"]).all()
+    assert out["losses"][-1] < out["losses"][0] * 1.2
+
+
+def test_serve_continuous_batching():
+    srv = Server("mamba2-1.3b", smoke=True, max_batch=3)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(
+        1, srv.cfg.vocab, size=8 + i).astype(np.int32), max_new=4)
+        for i in range(5)]
+    out = srv.generate(reqs)
+    assert set(out) == set(range(5))
+    assert all(len(v) == 4 for v in out.values())
+    assert srv.metrics["prefills"] == 2  # 3 + 2 under max_batch=3
+
+
+def test_serve_greedy_deterministic():
+    srv = Server("minitron-4b", smoke=True, max_batch=2)
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(1, srv.cfg.vocab, size=8).astype(np.int32)
+    r1 = srv.generate([Request(0, prompt.copy(), 5)])
+    r2 = srv.generate([Request(0, prompt.copy(), 5)])
+    assert r1[0] == r2[0]
