@@ -1,12 +1,17 @@
-"""Generate experiments/roofline_table.md from the dry-run JSONs."""
+"""Generate experiments/roofline_table.md from the dry-run JSONs, plus
+experiments/kernel_latency_table.md: the unified analysis subsystem's
+predicted FLOPs/bytes/latency per extracted kernel (run with --kernels),
+so the perf trajectory can track predicted vs measured throughput."""
 from __future__ import annotations
 
 import json
 import pathlib
+import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 DRY = ROOT / "experiments" / "dryrun"
 OUT = ROOT / "experiments" / "roofline_table.md"
+KOUT = ROOT / "experiments" / "kernel_latency_table.md"
 
 
 def load_cells():
@@ -70,5 +75,37 @@ def main():
     print(f"wrote {OUT} ({len(cells)} cells)")
 
 
+def kernel_table():
+    """Per-kernel roofline predictions from the unified analysis engine
+    (no dry-run artifacts needed): extracted-term FLOPs, HBM bytes, and
+    predicted latency under the default chip's compute/memory roofs."""
+    sys.path.insert(0, str(ROOT / "src"))
+    sys.path.insert(0, str(ROOT))
+    from benchmarks.saturation_stats import run_saturation_stats
+    res = run_saturation_stats()
+    lines = [
+        "# Kernel roofline predictions (unified analysis subsystem)",
+        "",
+        "Per extracted tile body: predicted VPU FLOPs, HBM bytes, and",
+        "roofline latency (v5e peaks; one tile instance). Compare against",
+        "measured step times from benchmarks/run.py to track predicted vs",
+        "measured throughput.",
+        "",
+        "| kernel | flops | bytes | latency_ns | bound |",
+        "|---|---|---|---|---|",
+    ]
+    for r in res["rows"]:
+        lines.append(
+            f"| {r['kernel']} | {r['predicted_flops']:.0f} | "
+            f"{r['predicted_bytes']:.0f} | "
+            f"{r['predicted_latency_ns']:.2f} | {r['predicted_bound']} |")
+    KOUT.parent.mkdir(parents=True, exist_ok=True)
+    KOUT.write_text("\n".join(lines) + "\n")
+    print(f"wrote {KOUT} ({len(res['rows'])} kernels)")
+
+
 if __name__ == "__main__":
-    main()
+    if "--kernels" in sys.argv:
+        kernel_table()
+    else:
+        main()

@@ -28,6 +28,12 @@ def run_saturation_stats() -> Dict:
             "e_nodes": rep["sat_nodes"],
             "iterations": rep["sat_iterations"],
             "stop": rep["sat_stop"],
+            # roofline-calibrated prediction of the extracted term
+            # (unified analysis subsystem; per-tile-instance units)
+            "predicted_flops": rep["predicted_flops"],
+            "predicted_bytes": rep["predicted_bytes"],
+            "predicted_latency_ns": rep["predicted_latency_ns"],
+            "predicted_bound": rep["predicted_bound"],
         })
     ssa_ms = [r["ssa_codegen_ms"] for r in rows]
     sat_s = [r["saturation_s"] for r in rows]

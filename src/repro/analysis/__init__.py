@@ -1,0 +1,20 @@
+"""Unified operation-statistics engine (roofline-calibrated costs).
+
+Merges the HLO roofline analyzer and the e-graph extraction cost models
+into one subsystem: per-node FLOP/byte/pass statistics
+(:mod:`.opstats`), a hardware latency model derived from the chip peaks
+(:mod:`.latency`), the extraction objective (:mod:`.cost_model`), and
+the HLO bridge (:mod:`.hlo`).
+"""
+from .opstats import (DTYPE_BYTES, TILE_ELEMS, OpStats, node_stats,
+                      op_pass_class, store_stats)
+from .latency import LatencyModel
+from .cost_model import RooflineCostModel
+from .hlo import latency_from_hlo, stats_from_hlo, stats_from_report
+
+__all__ = [
+    "OpStats", "node_stats", "op_pass_class", "store_stats",
+    "TILE_ELEMS", "DTYPE_BYTES",
+    "LatencyModel", "RooflineCostModel",
+    "latency_from_hlo", "stats_from_hlo", "stats_from_report",
+]

@@ -1,0 +1,71 @@
+"""Roofline-calibrated extraction cost model.
+
+The extractor minimizes *predicted latency* of the whole selected term,
+not a sum of abstract per-op weights. Two hooks drive it:
+
+* ``node_cost`` — additive surrogate (compute_ns + memory_ns of one
+  node). Used by the bottom-up tree fixed point to seed a valid
+  selection; since ``max(Σc, Σm) + s·min ≤ Σ(c+m)``, the surrogate upper-
+  bounds the true objective, so seeding with it is sound.
+* ``aggregate_cost`` — the real objective: roofline latency of the summed
+  statistics of all chosen nodes (shared e-classes counted once). The
+  DAG evaluator and hill-climbing local search in
+  :mod:`repro.core.extract` call this when present.
+
+Duck-typed against :class:`repro.core.cost.CostModel` (same ``node_cost``
+signature) so every existing call site keeps working.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Dict, Iterable, Optional
+
+from .latency import LatencyModel, _default_chip
+from .opstats import DTYPE_BYTES, TILE_ELEMS, OpStats, node_stats
+
+if TYPE_CHECKING:
+    from repro.core.hardware import ChipSpec
+    from repro.core.ir import ENode
+
+
+class RooflineCostModel:
+    """Extraction objective = roofline-predicted latency (ns)."""
+
+    name = "roofline"
+
+    def __init__(self, chip: Optional["ChipSpec"] = None, *,
+                 tile_elems: int = TILE_ELEMS,
+                 dtype_bytes: int = DTYPE_BYTES,
+                 latency: Optional[LatencyModel] = None):
+        self.chip = chip if chip is not None else _default_chip()
+        self.tile_elems = tile_elems
+        self.dtype_bytes = dtype_bytes
+        self.latency = latency or LatencyModel(self.chip,
+                                               tile_elems=tile_elems)
+        self._node_cache: Dict["ENode", OpStats] = {}
+
+    # -- per-node statistics --------------------------------------------------
+    def node_stats(self, node: ENode) -> OpStats:
+        st = self._node_cache.get(node)
+        if st is None:
+            st = node_stats(node, tile_elems=self.tile_elems,
+                            dtype_bytes=self.dtype_bytes)
+            self._node_cache[node] = st
+        return st
+
+    def choice_stats(self, nodes: Iterable[ENode]) -> OpStats:
+        total = OpStats()
+        for n in nodes:
+            total = total + self.node_stats(n)
+        return total
+
+    # -- extraction hooks -----------------------------------------------------
+    def node_cost(self, node: ENode) -> float:
+        st = self.node_stats(node)
+        return self.latency.compute_ns(st) + self.latency.memory_ns(st)
+
+    def aggregate_cost(self, nodes: Iterable[ENode]) -> float:
+        return self.latency.latency_ns(self.choice_stats(nodes))
+
+    # -- reporting ------------------------------------------------------------
+    def report(self, nodes: Iterable[ENode]) -> Dict[str, float]:
+        return self.latency.report(self.choice_stats(nodes))

@@ -1,0 +1,42 @@
+"""HLO side of the unified analysis subsystem.
+
+Bridges the trip-count-aware HLO walk
+(:mod:`repro.roofline.hlo_analysis`) into the same :class:`OpStats` /
+:class:`LatencyModel` currency the e-graph extractor prices terms with,
+so predicted-vs-measured throughput can be tracked in one unit system
+from a single tile body all the way up to a compiled training step.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from repro.core.hardware import DEFAULT_CHIP, ChipSpec
+from repro.roofline.hlo_analysis import HLOReport, analyze
+from .latency import LatencyModel
+from .opstats import OpStats
+
+
+def stats_from_report(rep: HLOReport) -> OpStats:
+    """Collapse an HLO walk into OpStats (traffic model counts reads and
+    writes together, so it all lands in ``bytes_read``)."""
+    return OpStats(mxu_flops=rep.dot_flops, bytes_read=rep.hbm_bytes)
+
+
+def stats_from_hlo(text: str, n_devices: int = 1) -> OpStats:
+    return stats_from_report(analyze(text, n_devices=n_devices))
+
+
+def latency_from_hlo(text: str, *, chip: ChipSpec = DEFAULT_CHIP,
+                     n_devices: int = 1) -> Dict[str, Any]:
+    """Three-term roofline of an HLO module in the unified ns units."""
+    rep = analyze(text, n_devices=n_devices)
+    stats = stats_from_report(rep)
+    lm = LatencyModel(chip)
+    out = lm.report(stats)
+    out["collective_ns"] = (rep.collective_wire_bytes
+                            / chip.ici_bw_per_link * 1e9)
+    out["latency_ns"] = max(out["latency_ns"], out["collective_ns"])
+    if out["collective_ns"] >= max(out["compute_ns"], out["memory_ns"]):
+        out["bound"] = "collective"
+    out["trip_counts"] = list(rep.trip_counts)
+    return out

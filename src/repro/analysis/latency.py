@@ -1,0 +1,83 @@
+"""Hardware latency model: OpStats → predicted nanoseconds on a chip.
+
+Classic roofline with three ceilings derived from the
+:class:`repro.core.hardware.ChipSpec` peaks:
+
+  compute  = VPU passes × tile cycles / clock  +  MXU FLOPs / peak
+  memory   = HBM bytes / HBM bandwidth
+  latency  = max(compute, memory) + slack × min(compute, memory)
+
+The ``overlap_slack`` term models imperfect compute/memory overlap (DMA
+issue, semaphore waits). It is deliberately small — the roofline maximum
+still dominates — but it makes the objective strictly monotone in both
+axes, so extraction always prefers "less computation, less memory access"
+even for terms pinned against one roof (the paper's §V-B motivation:
+ties under a flat weight table are exactly where extraction quality is
+lost).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Dict, Optional
+
+from .opstats import OpStats, TILE_ELEMS
+
+if TYPE_CHECKING:
+    from repro.core.hardware import ChipSpec
+
+
+def _default_chip():
+    # deferred: repro.core.__init__ imports this package, so hardware must
+    # not be pulled in at module load time
+    from repro.core.hardware import DEFAULT_CHIP
+    return DEFAULT_CHIP
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyModel:
+    chip: Optional["ChipSpec"] = None   # None -> DEFAULT_CHIP
+    tile_elems: int = TILE_ELEMS
+    overlap_slack: float = 0.05
+
+    def __post_init__(self):
+        if self.chip is None:
+            object.__setattr__(self, "chip", _default_chip())
+
+    def compute_ns(self, stats: OpStats) -> float:
+        vpu_s = stats.vpu_passes * self.tile_elems / self.chip.vpu_elems_per_s
+        mxu_s = stats.mxu_flops / self.chip.peak_flops_bf16
+        return (vpu_s + mxu_s) * 1e9
+
+    def memory_ns(self, stats: OpStats) -> float:
+        return stats.total_bytes / self.chip.hbm_bw * 1e9
+
+    def latency_ns(self, stats: OpStats) -> float:
+        c = self.compute_ns(stats)
+        m = self.memory_ns(stats)
+        return max(c, m) + self.overlap_slack * min(c, m)
+
+    def bound(self, stats: OpStats) -> str:
+        return "compute" if self.compute_ns(stats) >= self.memory_ns(stats) \
+            else "memory"
+
+    def arithmetic_intensity(self, stats: OpStats) -> float:
+        return stats.total_flops / stats.total_bytes if stats.total_bytes \
+            else float("inf")
+
+    def throughput_gbps(self, stats: OpStats) -> float:
+        """Achieved HBM GB/s if the term runs at predicted latency."""
+        lat = self.latency_ns(stats)
+        return stats.total_bytes / lat if lat > 0 else 0.0
+
+    def report(self, stats: OpStats) -> Dict[str, float]:
+        return {
+            "flops": stats.total_flops,
+            "vpu_passes": stats.vpu_passes,
+            "bytes_read": stats.bytes_read,
+            "bytes_written": stats.bytes_written,
+            "compute_ns": self.compute_ns(stats),
+            "memory_ns": self.memory_ns(stats),
+            "latency_ns": self.latency_ns(stats),
+            "bound": self.bound(stats),
+            "arithmetic_intensity": self.arithmetic_intensity(stats),
+        }

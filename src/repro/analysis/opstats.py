@@ -1,0 +1,145 @@
+"""Operation statistics: the unified per-node accounting engine.
+
+One table classifies every IR operator (shared with the paper-weight
+adapters in :mod:`repro.core.cost`), and :func:`node_stats` prices a node
+in hardware terms — FLOPs, HBM byte traffic, and VPU tile passes — under
+the saturator's tile execution model: every e-graph term is the body of
+one tile program, so a `load` moves one tile HBM→VMEM and an elementwise
+op is one (or more) full-tile VPU passes.
+
+These statistics are the shared currency between the e-graph extractor
+(:class:`repro.analysis.cost_model.RooflineCostModel`) and the HLO
+roofline walk (:mod:`repro.analysis.hlo`): both sides reduce to an
+:class:`OpStats`, and :mod:`repro.analysis.latency` turns either into a
+predicted latency against the chip peaks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # avoid a load-time cycle: repro.core.cost imports us
+    from repro.core.ir import ENode
+
+# ---------------------------------------------------------------------------
+# Operator classification — the single source of truth. The paper cost
+# model (repro.core.cost) derives its 0/1/10/100 weight classes from these
+# same sets, so the two layers can never drift apart.
+# ---------------------------------------------------------------------------
+FREE_OPS = frozenset({"const", "tuple"})
+INPUT_OPS = frozenset({"var", "array"})          # paper weight 1
+PHI_OPS = frozenset({"phi", "phi_loop"})         # paper weight 1
+MEMORY_OPS = frozenset({"load"})                 # paper weight 100
+CALL_OPS = frozenset({"call"})                   # paper weight 100
+SERIAL_ARITH = frozenset({"div", "mod"})         # paper weight 100
+TRANSCENDENTALS = frozenset({"exp", "log", "tanh", "sigmoid", "pow"})
+ROOTLIKE = frozenset({"sqrt", "rsqrt", "recip"})
+SIGN_OPS = frozenset({"neg"})                    # folds into FMA operands
+REDUCTIONS = frozenset({"rsum", "rmean", "rmax"})
+
+# Default tile geometry: one (8, 128) f32 vreg tile per term instance.
+TILE_ELEMS = 8 * 128
+DTYPE_BYTES = 4
+
+# VPU multi-pass issue counts (v5e timing; same rationale as TPUCostModel:
+# transcendentals are 4-8 pass pipelined polynomial sequences, true divide
+# ~10 passes, cross-lane reductions a short log-tree).
+_PASSES = {
+    "transcendental": 8.0,
+    "rootlike": 4.0,
+    "serial": 10.0,
+    "call": 20.0,
+    "reduction": 4.0,
+    "simple": 1.0,
+    "sign": 0.0,     # folds into the consumer's FMA operand slot
+    "leaf": 0.0,
+}
+
+# FLOPs per element (mirrors repro.core.cost.count_flops so roofline and
+# histogram accounting agree).
+_FLOPS_PER_ELEM = {
+    "add": 1, "sub": 1, "mul": 1, "div": 1, "neg": 1, "min": 1, "max": 1,
+    "square": 1, "recip": 1, "mod": 1, "fma": 2,
+    "exp": 8, "log": 8, "sqrt": 8, "rsqrt": 8, "tanh": 8, "sigmoid": 8,
+    "pow": 8,
+    "rsum": 1, "rmean": 1, "rmax": 1,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class OpStats:
+    """Additive hardware statistics for a node, term, or whole program."""
+    flops: float = 0.0            # elementwise (VPU) floating-point ops
+    mxu_flops: float = 0.0        # matrix-unit FLOPs (HLO dots/convs)
+    bytes_read: float = 0.0
+    bytes_written: float = 0.0
+    vpu_passes: float = 0.0       # full-tile vector issue slots
+    n_ops: int = 0                # executed instructions (non-leaf nodes)
+
+    @property
+    def total_flops(self) -> float:
+        return self.flops + self.mxu_flops
+
+    @property
+    def total_bytes(self) -> float:
+        return self.bytes_read + self.bytes_written
+
+    def __add__(self, other: "OpStats") -> "OpStats":
+        return OpStats(
+            flops=self.flops + other.flops,
+            mxu_flops=self.mxu_flops + other.mxu_flops,
+            bytes_read=self.bytes_read + other.bytes_read,
+            bytes_written=self.bytes_written + other.bytes_written,
+            vpu_passes=self.vpu_passes + other.vpu_passes,
+            n_ops=self.n_ops + other.n_ops)
+
+    def scaled(self, k: float) -> "OpStats":
+        return OpStats(flops=self.flops * k, mxu_flops=self.mxu_flops * k,
+                       bytes_read=self.bytes_read * k,
+                       bytes_written=self.bytes_written * k,
+                       vpu_passes=self.vpu_passes * k,
+                       n_ops=int(self.n_ops * k))
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def op_pass_class(op: str) -> str:
+    """Pass-count class of an operator (also keys the paper adapters)."""
+    if op in FREE_OPS or op in INPUT_OPS or op in PHI_OPS:
+        return "leaf"
+    if op in SIGN_OPS:
+        return "sign"
+    if op in TRANSCENDENTALS:
+        return "transcendental"
+    if op in ROOTLIKE:
+        return "rootlike"
+    if op in SERIAL_ARITH:
+        return "serial"
+    if op in CALL_OPS:
+        return "call"
+    if op in REDUCTIONS:
+        return "reduction"
+    if op in MEMORY_OPS:
+        return "leaf"   # no VPU pass; priced on the memory axis
+    return "simple"     # arith, cmp, select, structural tile ops
+
+
+def node_stats(node: ENode, *, tile_elems: int = TILE_ELEMS,
+               dtype_bytes: int = DTYPE_BYTES) -> OpStats:
+    """Hardware statistics of one e-node under tile semantics."""
+    op = node.op
+    tile_bytes = float(tile_elems * dtype_bytes)
+    counted = op not in FREE_OPS and op not in INPUT_OPS
+    if op in MEMORY_OPS:
+        return OpStats(bytes_read=tile_bytes, n_ops=1)
+    passes = _PASSES[op_pass_class(op)]
+    flops = _FLOPS_PER_ELEM.get(op, 0) * float(tile_elems)
+    return OpStats(flops=flops, vpu_passes=passes, n_ops=1 if counted else 0)
+
+
+def store_stats(n_stores: int, *, tile_elems: int = TILE_ELEMS,
+                dtype_bytes: int = DTYPE_BYTES) -> OpStats:
+    """Write traffic of a term's root stores (constant across extraction
+    choices — reported, never part of the minimized objective)."""
+    return OpStats(bytes_written=float(n_stores * tile_elems * dtype_bytes))

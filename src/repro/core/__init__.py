@@ -1,5 +1,7 @@
 # The paper's primary contribution: equality saturation for directive-style
 # parallel code, adapted to JAX/TPU (see DESIGN.md).
+from repro.analysis import (LatencyModel, OpStats, RooflineCostModel,
+                            node_stats)
 from .cost import CostModel, TPUCostModel, count_flops, count_ops, instruction_mix
 from .dsl import (ArrayHandle, Expr, KernelProgram, c, call, exp, fma,
                   gelu_tanh, log, maximum, minimum, recip, rmax, rmean,
@@ -17,6 +19,7 @@ from .rules import (EXTENDED_RULES, PAPER_RULES, TPU_RULES, Rule, run_rules)
 from .ssa import SSAResult, build_ssa
 
 __all__ = [
+    "LatencyModel", "OpStats", "RooflineCostModel", "node_stats",
     "CostModel", "TPUCostModel", "count_flops", "count_ops",
     "instruction_mix", "ArrayHandle", "Expr", "KernelProgram", "EGraph",
     "ENode", "ExtractionResult", "extract_dag", "extract_exact",

@@ -1,4 +1,11 @@
-"""Cost models (paper §V-B).
+"""Cost models (paper §V-B) — thin adapters over the unified analysis
+subsystem.
+
+The operator classification lives in :mod:`repro.analysis.opstats`; the
+classes here map those classes onto the paper's abstract weights, so the
+flat-weight models and the roofline-calibrated extraction objective
+(:class:`repro.analysis.RooflineCostModel`) can never disagree about
+what an operator *is* — only about what it costs.
 
 The paper's model: constants cost 0, each input variable or phi costs 1,
 every computational operation costs 10 except division and modular
@@ -14,7 +21,13 @@ from __future__ import annotations
 
 from typing import Dict
 
+from repro.analysis.opstats import (CALL_OPS, FREE_OPS, INPUT_OPS,
+                                    MEMORY_OPS, PHI_OPS, ROOTLIKE,
+                                    SERIAL_ARITH, TRANSCENDENTALS)
+
 from .ir import ENode
+
+_EXPENSIVE_OPS = MEMORY_OPS | CALL_OPS | SERIAL_ARITH
 
 
 class CostModel:
@@ -29,18 +42,14 @@ class CostModel:
 
     def node_cost(self, node: ENode) -> float:
         op = node.op
-        if op == "const":
+        if op in FREE_OPS:
             return self.CONST
-        if op in ("var", "array"):
+        if op in INPUT_OPS:
             return self.VAR
-        if op in ("phi", "phi_loop"):
+        if op in PHI_OPS:
             return self.PHI
-        if op in ("load", "call"):
+        if op in _EXPENSIVE_OPS:
             return self.EXPENSIVE
-        if op in ("div", "mod"):
-            return self.EXPENSIVE
-        if op == "tuple":
-            return 0.0
         return self.OP
 
 
@@ -59,9 +68,9 @@ class TPUCostModel(CostModel):
 
     def node_cost(self, node: ENode) -> float:
         op = node.op
-        if op in ("exp", "log", "tanh", "sigmoid", "pow"):
+        if op in TRANSCENDENTALS:
             return self.TRANSCENDENTAL
-        if op in ("sqrt", "rsqrt", "recip"):
+        if op in ROOTLIKE:
             return self.TRANSCENDENTAL / 2
         if op == "neg":
             # sign flips fold into FMA operands on the VPU/MXU — free.

@@ -243,8 +243,26 @@ class EGraph:
 
     # -- extraction entry (delegates) ----------------------------------------------
     def extract(self, roots, cost_model=None, **kw):
+        """Extract minimum-cost terms (roofline-predicted latency unless a
+        flat cost model is passed explicitly)."""
         from .extract import extract_dag
         return extract_dag(self, roots, cost_model=cost_model, **kw)
+
+    def choice_stats(self, choice, roots, n_stores: int = 0):
+        """Roofline statistics (flops/bytes/latency) of an extraction
+        choice map — the unified analysis view of a selected term.
+        ``n_stores`` adds the root stores' HBM write traffic (constant
+        across choices, so reported but never minimized)."""
+        from repro.analysis import RooflineCostModel, store_stats
+        from .extract import choice_nodes
+        if isinstance(roots, int):
+            roots = (roots,)
+        nodes = choice_nodes(self, choice, roots)
+        if nodes is None:
+            return None
+        cm = RooflineCostModel()
+        stats = cm.choice_stats(nodes) + store_stats(n_stores)
+        return cm.latency.report(stats)
 
 
 # -- patterns -------------------------------------------------------------------

@@ -11,6 +11,15 @@ with:
   3. hill-climbing local search over per-class node choices against the
      true DAG objective, with acyclicity checking — our ILP stand-in.
 
+The default objective is *roofline-predicted latency*
+(:class:`repro.analysis.RooflineCostModel`): a cost model may expose
+``aggregate_cost(nodes)`` and the DAG evaluator then scores a selection
+by that non-additive objective (here ``max(compute, memory)`` over the
+summed statistics of the chosen nodes) instead of a per-node weight sum —
+extraction picks terms that realize less computation AND less memory
+traffic simultaneously, not just fewer abstract ops. Flat-weight models
+(:class:`repro.core.cost.CostModel`) still work unchanged.
+
 `extract_exact` brute-forces tiny graphs and is used by tests to verify
 the local search reaches the optimum where enumeration is feasible.
 """
@@ -19,7 +28,10 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+from typing import (Any, Dict, Iterable, List, Optional, Sequence, Set,
+                    Tuple)
+
+from repro.analysis import RooflineCostModel
 
 from .cost import CostModel
 from .egraph import EGraph
@@ -36,6 +48,7 @@ class ExtractionResult:
     tree_cost: float
     wall_s: float = 0.0
     improved_by_search: float = 0.0    # dag-cost reduction from local search
+    predicted: Optional[Dict[str, Any]] = None  # roofline stats of choice
 
     def term(self, eg: EGraph, root: Optional[int] = None):
         from .egraph import extract_to_term
@@ -70,13 +83,13 @@ def _tree_costs(eg: EGraph, cm: CostModel):
 
 
 # -- DAG cost of a choice map ------------------------------------------------------
-def dag_cost_of(eg: EGraph, cm: CostModel, choice: Dict[int, ENode],
-                roots: Sequence[int]) -> float:
-    """Sum node costs over classes reachable from roots, each counted once.
+def choice_nodes(eg: EGraph, choice: Dict[int, ENode],
+                 roots: Sequence[int]) -> Optional[List[ENode]]:
+    """Chosen nodes over classes reachable from roots, each class once.
 
-    Returns inf on a cyclic selection.
+    Returns None on a cyclic or incomplete selection.
     """
-    cost = 0.0
+    nodes: List[ENode] = []
     state: Dict[int, int] = {}  # 0=on stack, 1=done
     stack: List[Tuple[int, bool]] = [(eg.find(r), False) for r in roots]
     while stack:
@@ -89,20 +102,37 @@ def dag_cost_of(eg: EGraph, cm: CostModel, choice: Dict[int, ENode],
         if st == 1:
             continue
         if st == 0:
-            return INF  # cycle
+            return None  # cycle
         node = choice.get(cid)
         if node is None:
-            return INF
+            return None
         state[cid] = 0
         stack.append((cid, True))
-        cost += cm.node_cost(node)
+        nodes.append(node)
         for ch in node.children:
             ch = eg.find(ch)
             if state.get(ch) is None:
                 stack.append((ch, False))
             elif state.get(ch) == 0:
-                return INF
-    return cost
+                return None
+    return nodes
+
+
+def dag_cost_of(eg: EGraph, cm: CostModel, choice: Dict[int, ENode],
+                roots: Sequence[int]) -> float:
+    """Cost of a selection with shared classes counted once.
+
+    Models exposing ``aggregate_cost`` (the roofline objective) score the
+    whole node multiset at once; flat models sum per-node weights.
+    Returns inf on a cyclic selection.
+    """
+    nodes = choice_nodes(eg, choice, roots)
+    if nodes is None:
+        return INF
+    aggregate = getattr(cm, "aggregate_cost", None)
+    if aggregate is not None:
+        return aggregate(nodes)
+    return sum(cm.node_cost(n) for n in nodes)
 
 
 def reachable(eg: EGraph, choice: Dict[int, ENode],
@@ -158,9 +188,14 @@ def _local_search(eg: EGraph, cm: CostModel, choice: Dict[int, ENode],
 def extract_dag(eg: EGraph, roots, cost_model: Optional[CostModel] = None,
                 *, time_limit_s: float = 5.0,
                 local_search: bool = True) -> ExtractionResult:
-    """Extract a minimum-DAG-cost selection covering ``roots``."""
+    """Extract a minimum-DAG-cost selection covering ``roots``.
+
+    Defaults to the roofline-calibrated cost model: the objective is the
+    predicted latency of the extracted term against the chip's compute
+    and memory roofs, not a flat op-weight sum.
+    """
     t0 = time.perf_counter()
-    cm = cost_model or CostModel()
+    cm = cost_model if cost_model is not None else RooflineCostModel()
     if isinstance(roots, int):
         roots = (roots,)
     roots = tuple(eg.find(r) for r in roots)
@@ -172,21 +207,50 @@ def extract_dag(eg: EGraph, roots, cost_model: Optional[CostModel] = None,
     choice, cost = tree_choice, base_cost
     if local_search:
         deadline = t0 + time_limit_s
-        choice, cost = _local_search(eg, cm, tree_choice, roots, deadline)
+        seeds = [tree_choice]
+        if getattr(cm, "aggregate_cost", None) is not None \
+                and not isinstance(cm, CostModel):
+            # Multi-start for the non-additive roofline objective: the
+            # flat-weight extractor's refined solution is an independent
+            # restart, so the roofline pick can never be worse than what
+            # the paper model would have chosen (hill climbing from a
+            # seed only improves the aggregate objective).
+            flat_cm = CostModel()
+            _, flat_choice = _tree_costs(eg, flat_cm)
+            if all(r in flat_choice for r in roots):
+                # cap seed refinement at a third of the remaining budget —
+                # the flat objective is only a restart heuristic; most of
+                # the deadline belongs to the true (roofline) objective
+                now = time.perf_counter()
+                refine_deadline = now + max(deadline - now, 0.0) / 3.0
+                refined, _ = _local_search(eg, flat_cm, flat_choice,
+                                           roots, refine_deadline)
+                seeds.append(refined)
+        for seed in seeds:
+            ch, c = _local_search(eg, cm, seed, roots, deadline)
+            if c < cost:
+                choice, cost = ch, c
     live = reachable(eg, choice, roots)
     choice = {cid: n for cid, n in choice.items() if cid in live}
+    predicted = None
+    reporter = getattr(cm, "report", None)
+    if reporter is not None:
+        nodes = choice_nodes(eg, choice, roots)
+        if nodes is not None:
+            predicted = reporter(nodes)
     return ExtractionResult(
         choice=choice, roots=roots, dag_cost=cost,
         tree_cost=sum(tree_cost[r] for r in roots),
         wall_s=time.perf_counter() - t0,
-        improved_by_search=base_cost - cost)
+        improved_by_search=base_cost - cost,
+        predicted=predicted)
 
 
 # -- brute force for tests -----------------------------------------------------------
 def extract_exact(eg: EGraph, roots, cost_model: Optional[CostModel] = None,
                   max_combos: int = 200_000) -> ExtractionResult:
     """Enumerate all acyclic selections (tiny graphs only)."""
-    cm = cost_model or CostModel()
+    cm = cost_model if cost_model is not None else RooflineCostModel()
     if isinstance(roots, int):
         roots = (roots,)
     roots = tuple(eg.find(r) for r in roots)

@@ -11,12 +11,22 @@ import dataclasses
 @dataclasses.dataclass(frozen=True)
 class ChipSpec:
     name: str
-    peak_flops_bf16: float      # FLOP/s
+    peak_flops_bf16: float      # FLOP/s (matrix unit)
     hbm_bw: float               # bytes/s
     ici_bw_per_link: float      # bytes/s per link
     hbm_bytes: int              # HBM capacity
     vmem_bytes: int             # usable VMEM per core (conservative)
     ici_links: int = 4          # 2D torus: 4 links/chip
+    # Vector-unit issue model (used by the unified analysis subsystem to
+    # price elementwise tile passes): `vpu_lanes` elements retire per
+    # cycle at `clock_hz`.
+    vpu_lanes: int = 8 * 128    # v5e VPU: (8, 128) vregs
+    clock_hz: float = 0.94e9
+
+    @property
+    def vpu_elems_per_s(self) -> float:
+        """Elementwise lanes/sec — the vector-issue roofline ceiling."""
+        return self.vpu_lanes * self.clock_hz
 
 
 TPU_V5E = ChipSpec(
@@ -37,6 +47,8 @@ A100_PCIE_40GB = ChipSpec(
     ici_bw_per_link=64e9,       # NVLink3 per-direction aggregate/ring share
     hbm_bytes=40 * 1024**3,
     vmem_bytes=192 * 1024,      # SMEM+L1 per SM — for commentary only
+    vpu_lanes=108 * 64,         # 108 SMs × 64 FP32 lanes
+    clock_hz=1.41e9,
 )
 
 DEFAULT_CHIP = TPU_V5E

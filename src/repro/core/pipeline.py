@@ -21,6 +21,8 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, Optional
 
+from repro.analysis import RooflineCostModel
+
 from .codegen import CodeGenerator, GeneratedKernel
 from .cost import CostModel, TPUCostModel
 from .dsl import KernelProgram
@@ -31,6 +33,7 @@ from .rules import (EXTENDED_RULES, PAPER_RULES, TPU_RULES, Rule,
 from .ssa import SSAResult, build_ssa
 
 MODES = ("baseline", "cse", "cse_sat", "cse_bulk", "accsat")
+COST_MODELS = ("paper", "tpu_v5e", "roofline")
 
 
 @dataclasses.dataclass
@@ -41,7 +44,9 @@ class SaturatorConfig:
     node_limit: int = 10_000
     time_limit_s: float = 10.0
     extract_time_limit_s: float = 30.0
-    cost_model: str = "paper"      # 'paper' | 'tpu_v5e'
+    # 'roofline' minimizes predicted latency (repro.analysis); 'paper' and
+    # 'tpu_v5e' are the flat-weight models kept for ablation comparisons.
+    cost_model: str = "roofline"
     extended_rules: bool = False   # §V-A restricted set (off, as in paper)
     tpu_rules: bool = False        # beyond-paper strength reduction
     local_search: bool = True      # DAG-cost refinement (ILP stand-in)
@@ -49,6 +54,9 @@ class SaturatorConfig:
     def __post_init__(self):
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, got {self.mode}")
+        if self.cost_model not in COST_MODELS:
+            raise ValueError(f"cost_model must be one of {COST_MODELS}, "
+                             f"got {self.cost_model}")
 
     @property
     def use_sat(self) -> bool:
@@ -71,6 +79,8 @@ class SaturatorConfig:
         return rules
 
     def make_cost_model(self) -> CostModel:
+        if self.cost_model == "roofline":
+            return RooflineCostModel()
         return TPUCostModel() if self.cost_model == "tpu_v5e" else CostModel()
 
 
@@ -98,10 +108,17 @@ class SaturatedKernel:
 
     def report(self) -> Dict[str, Any]:
         s = self.kernel.stats
+        pred = self.extraction.predicted or {}
         return {
             "mode": self.config.mode,
+            "cost_model": self.config.cost_model,
             "dag_cost": self.extraction.dag_cost,
             "tree_cost": self.extraction.tree_cost,
+            "predicted_flops": pred.get("flops", 0.0),
+            "predicted_bytes": (pred.get("bytes_read", 0.0)
+                                + pred.get("bytes_written", 0.0)),
+            "predicted_latency_ns": pred.get("latency_ns", 0.0),
+            "predicted_bound": pred.get("bound", "n/a"),
             "n_temps": s.n_temps,
             "n_loads": s.n_loads,
             "n_stores": s.n_stores,
@@ -145,6 +162,13 @@ def saturate_program(prog: KernelProgram,
                         extra_fns=extra_fns,
                         reuse_temps=cfg.use_cse).generate()
     codegen_wall = time.perf_counter() - t1
+    # Roofline prediction of the chosen term including root-store write
+    # traffic (known only post-codegen), regardless of which cost model
+    # drove extraction — ablations compare in the same units.
+    predicted = ssa.egraph.choice_stats(extraction.choice, extraction.roots,
+                                        n_stores=gen.stats.n_stores)
+    if predicted is not None:
+        extraction.predicted = predicted
     return SaturatedKernel(kernel=gen, ssa=ssa, extraction=extraction,
                            saturation=sat_report, config=cfg,
                            ssa_wall_s=ssa_wall, codegen_wall_s=codegen_wall)

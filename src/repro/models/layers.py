@@ -310,9 +310,17 @@ def attn_decode(p, x1, kv_cache, pos, cfg: ModelConfig,
     # left unpinned they came back replicated (16 GiB of temps at 32k)
     logits = ctx.constrain(logits, "dp", None, None, None, "tp")
     logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1)
+    # Mirror the flash kernel's order of operations exactly — unnormalized
+    # exp weights cast to the value dtype, PV accumulated in f32, then the
+    # f32 normalizer applied — so decode reproduces teacher-forcing logits
+    # bitwise instead of drifting one bf16 ulp per layer.
+    m = jnp.max(logits, -1, keepdims=True)
+    pmat = jnp.exp(logits - m)
+    l = pmat.sum(-1, keepdims=True)
     v_r = v_c.astype(x1.dtype) if v_c.dtype != x1.dtype else v_c
-    o = jnp.einsum("bkgqs,bksd->bkgqd", probs.astype(v_r.dtype), v_r)
+    acc = jnp.einsum("bkgqs,bksd->bkgqd", pmat.astype(v_r.dtype), v_r,
+                     preferred_element_type=jnp.float32)
+    o = (acc / l).astype(x1.dtype)
     o = o.reshape(B, cfg.n_heads, 1, cfg.head_dim)
     o = ctx.constrain(o, "dp", None, None, None)
     return _merge_heads(o) @ p["wo"], (k_c, v_c)

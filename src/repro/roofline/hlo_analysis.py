@@ -96,6 +96,41 @@ def _opcode_of(body: str) -> Tuple[str, str, str]:
     return body[:best.start(1)], best.group(1), body[best.start(1):]
 
 
+def _parse_operands(opcode: str, rest: str) -> List[str]:
+    """Operand names of ``opcode(...)``.
+
+    Full-form HLO spells each operand as ``f32[128,128]{1,0} %name`` —
+    commas appear inside shape brackets and tuple types, so the argument
+    list must be split at top-level commas only, and the operand name is
+    the trailing token of each piece.
+    """
+    if not rest.startswith(opcode + "("):
+        return []
+    depth = 0
+    args: List[str] = []
+    cur: List[str] = []
+    for ch in rest[len(opcode) + 1:]:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            if depth == 0 and ch == ")":
+                break
+            depth -= 1
+        elif ch == "," and depth == 0:
+            args.append("".join(cur))
+            cur = []
+            continue
+        cur.append(ch)
+    args.append("".join(cur))
+    out = []
+    for a in args:
+        toks = a.split()
+        if not toks:
+            continue
+        out.append(toks[-1].lstrip("%"))
+    return out
+
+
 def parse_hlo(text: str) -> Dict[str, Computation]:
     comps: Dict[str, Computation] = {}
     cur: Optional[Computation] = None
@@ -114,10 +149,7 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
         type_str, opcode, rest = _opcode_of(body)
         operands: List[str] = []
         if opcode:
-            ops_m = re.match(re.escape(opcode) + r"\(([^)]*)\)", rest)
-            if ops_m:
-                operands = [o.strip().lstrip("%") for o in
-                            ops_m.group(1).split(",") if o.strip()]
+            operands = _parse_operands(opcode, rest)
         ins = Instr(name=name, opcode=opcode, type_str=type_str,
                     rest=rest, operands=operands)
         cur.instrs.append(ins)

@@ -1,0 +1,83 @@
+"""Import shim: real hypothesis when installed, deterministic fallback
+otherwise.
+
+The property tests only need ``given``/``settings`` plus the
+``integers``/``sampled_from`` strategies, so when the container has no
+``hypothesis`` wheel (no network at test time) we run each property over a
+small deterministic sample sweep instead of skipping the module outright.
+The fallback caps example counts (`_MAX_EXAMPLES_CAP`) to keep the suite's
+wall time close to the hypothesis-enabled run.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fallback
+    import functools
+    import inspect
+
+    HAVE_HYPOTHESIS = False
+    _MAX_EXAMPLES_CAP = 8
+
+    class _Strategy:
+        """Deterministic example stream standing in for a strategy."""
+
+        def __init__(self, fn):
+            self._fn = fn  # example index -> value
+
+        def example_at(self, i: int):
+            return self._fn(i)
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            span = max_value - min_value
+            # low-discrepancy sweep: endpoints first, then golden-ratio hops
+            def pick(i):
+                if i == 0:
+                    return min_value
+                if i == 1:
+                    return max_value
+                return min_value + (i * 2654435761) % (span + 1)
+            return _Strategy(pick)
+
+        @staticmethod
+        def sampled_from(options):
+            options = list(options)
+            return _Strategy(lambda i: options[i % len(options)])
+
+    st = _Strategies()
+
+    def settings(max_examples=None, deadline=None, **_ignored):
+        def deco(fn):
+            if max_examples is not None:
+                fn._max_examples = min(max_examples, _MAX_EXAMPLES_CAP)
+            return fn
+        return deco
+
+    def given(*gargs, **gkwargs):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            names = [p.name for p in params]
+            # positional strategies bind the trailing parameters (the
+            # leading ones stay for pytest fixtures/parametrize)
+            kwmap = dict(gkwargs)
+            if gargs:
+                for name, strat in zip(names[len(names) - len(gargs):],
+                                       gargs):
+                    kwmap[name] = strat
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                for i in range(wrapper._max_examples):
+                    drawn = {k: s.example_at(i) for k, s in kwmap.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            wrapper._max_examples = _MAX_EXAMPLES_CAP
+            # hide strategy-bound params from pytest's fixture resolution
+            wrapper.__signature__ = sig.replace(
+                parameters=[p for p in params if p.name not in kwmap])
+            return wrapper
+        return deco

@@ -6,7 +6,7 @@ semantic soundness of saturation (every extractable term evaluates equal
 to the original)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.egraph import EGraph, add_expr, extract_to_term
 from repro.core.ir import ENode

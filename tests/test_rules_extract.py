@@ -1,7 +1,7 @@
 """Rule soundness (Table I) + extraction quality (CSE-aware DAG cost)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.cost import CostModel, TPUCostModel, count_ops
 from repro.core.egraph import EGraph, add_expr
@@ -97,12 +97,11 @@ def test_local_search_matches_bruteforce(seed):
 
 
 def test_cse_counted_once():
-    # (a+b)*(a+b): DAG cost counts a+b once
+    # (a+b)*(a+b): DAG cost counts a+b once (paper weight units)
     eg = EGraph()
     ab = ("add", ("var", "a"), ("var", "b"))
     root = add_expr(eg, ("mul", ab, ab))
-    res = extract_dag(eg, root)
-    cm = CostModel()
+    res = extract_dag(eg, root, cost_model=CostModel())
     # vars 2×1 + add 10 + mul 10 = 22
     assert res.dag_cost == pytest.approx(22.0)
     assert res.tree_cost == pytest.approx(34.0)
@@ -113,7 +112,7 @@ def test_multi_root_sharing():
     bc = ("mul", ("var", "b"), ("var", "c"))
     r1 = add_expr(eg, ("add", ("var", "a"), bc))
     r2 = add_expr(eg, ("mul", bc, ("var", "d")))
-    res = extract_dag(eg, (r1, r2))
+    res = extract_dag(eg, (r1, r2), cost_model=CostModel())
     # a,b,c,d + mul(b,c) + add + mul = 4 + 30
     assert res.dag_cost == pytest.approx(34.0)
 
