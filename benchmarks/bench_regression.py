@@ -1,0 +1,156 @@
+"""Benchmark-regression gate for CI (PR 3 satellite).
+
+Runs the saturator over the full kernel suite (NPB/SPEC-style kernels +
+model tile programs), extracts every kernel with both the beam search and
+the PR-2 hill climb, and compares the roofline-predicted latency and
+extracted DAG cost against the committed baseline
+(``experiments/bench_baseline.json``).
+
+The build fails when any kernel:
+
+* regresses more than ``TOLERANCE_PCT`` (2%) in predicted latency or DAG
+  cost vs the baseline, or
+* extracts *worse* with the beam than with the hill climb (the beam is
+  seeded with the hill climb's restarts, so this indicates a search
+  regression, not noise).
+
+Predicted metrics are model-computed (chip constants) and every search
+pass stops on a deterministic evaluation budget (`beam_expansions`,
+`hillclimb_evals`) rather than the wall clock, with generous time
+ceilings as pure safety nets (``saturation_stats.GATE_CONFIG``) — so
+the gate is exact on any runner regardless of machine speed or load,
+unlike wall-clock benchmarks. The hill-climb comparison re-extracts the
+*same* saturated e-graph, so beam <= hillclimb holds structurally
+within one run. The script re-execs itself with ``PYTHONHASHSEED=0`` —
+e-node sets iterate in hash order, so rule-match ordering (and with it
+plateau tie-breaks in extraction) would otherwise drift per process.
+Kernels new since the baseline are reported but do not fail the gate;
+refresh the baseline with ``--update`` after intentional cost-model or
+extraction changes and commit the diff.
+
+Usage:
+    python benchmarks/bench_regression.py            # check vs baseline
+    python benchmarks/bench_regression.py --update   # rewrite baseline
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+from hashseed import reexec_with_fixed_hashseed  # noqa: E402
+
+reexec_with_fixed_hashseed()
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BASELINE = ROOT / "experiments" / "bench_baseline.json"
+CURRENT = ROOT / "experiments" / "bench_current.json"
+BEAM_STATS = ROOT / "experiments" / "beam_stats.json"
+
+TOLERANCE_PCT = 2.0
+ABS_EPS = 1e-6          # ignore float dust on tiny costs
+BEAM_EPS = 1e-6
+
+
+def collect():
+    sys.path.insert(0, str(ROOT / "src"))
+    sys.path.insert(0, str(ROOT))
+    from benchmarks.saturation_stats import run_saturation_stats
+    res = run_saturation_stats(compare_hillclimb=True)
+    metrics = {}
+    for r in res["rows"]:
+        metrics[r["kernel"]] = {
+            "predicted_latency_ns": r["predicted_latency_ns"],
+            "dag_cost": r["dag_cost"],
+            "hillclimb_latency_ns": r["hillclimb_latency_ns"],
+            "hillclimb_dag_cost": r["hillclimb_dag_cost"],
+            "beam_vs_hillclimb_pct": r["beam_vs_hillclimb_pct"],
+            "oracle_gap": r["oracle_gap"],
+        }
+    return res, metrics
+
+
+def check(metrics, baseline) -> list:
+    failures = []
+    # losing a kernel is itself a regression (coverage silently shrank)
+    missing = sorted(set(baseline) - set(metrics))
+    if missing:
+        failures.append(
+            f"kernel(s) in baseline but absent from this run: {missing} "
+            "(remove them with --update if intentional)")
+    for kernel, cur in sorted(metrics.items()):
+        # structural invariant: beam never worse than hill climb ON THE
+        # EXTRACTION OBJECTIVE (dag_cost, store-free). The reported
+        # latencies add constant store traffic, and a roofline max does
+        # not preserve ordering under a shift on one axis — a genuinely
+        # better but more memory-leaning beam pick could legally show a
+        # higher store-inclusive latency, so that pair is not gated.
+        if cur["dag_cost"] > cur["hillclimb_dag_cost"] + BEAM_EPS:
+            failures.append(
+                f"{kernel}: beam dag_cost {cur['dag_cost']:.6f} worse "
+                f"than hill climb {cur['hillclimb_dag_cost']:.6f}")
+        base = baseline.get(kernel)
+        if base is None:
+            print(f"  NEW    {kernel} (not in baseline; add with --update)")
+            continue
+        for metric in ("predicted_latency_ns", "dag_cost"):
+            b, c = base[metric], cur[metric]
+            if c > b + ABS_EPS and (c - b) > abs(b) * TOLERANCE_PCT / 100.0:
+                pct = f"+{100.0 * (c - b) / b:.2f}%" if b else "from zero"
+                failures.append(
+                    f"{kernel}: {metric} regressed "
+                    f"{b:.4f} -> {c:.4f} ({pct} > {TOLERANCE_PCT}%)")
+    return failures
+
+
+def main() -> int:
+    update = "--update" in sys.argv
+    res, metrics = collect()
+
+    CURRENT.parent.mkdir(parents=True, exist_ok=True)
+    CURRENT.write_text(json.dumps(metrics, indent=2, sort_keys=True) + "\n")
+    beam_rows = [{k: r[k] for k in
+                  ("kernel", "search", "predicted_latency_ns",
+                   "hillclimb_latency_ns", "beam_vs_hillclimb_pct",
+                   "dag_cost", "hillclimb_dag_cost", "beam_generations",
+                   "beam_expanded", "oracle_gap", "extract_s")}
+                 for r in res["rows"]]
+    BEAM_STATS.write_text(json.dumps(beam_rows, indent=2) + "\n")
+    print(f"wrote {CURRENT} and {BEAM_STATS} ({len(metrics)} kernels)")
+
+    # refresh the latency table from the same run (artifact-uploaded by CI)
+    from benchmarks.roofline_table import kernel_table
+    kernel_table(res)
+
+    if update:
+        BASELINE.write_text(json.dumps(metrics, indent=2, sort_keys=True)
+                            + "\n")
+        print(f"baseline updated: {BASELINE}")
+        return 0
+
+    if not BASELINE.exists():
+        print(f"ERROR: no baseline at {BASELINE}; "
+              "run with --update and commit it", file=sys.stderr)
+        return 2
+    baseline = json.loads(BASELINE.read_text())
+    failures = check(metrics, baseline)
+    for kernel, cur in sorted(metrics.items()):
+        base = baseline.get(kernel, {})
+        b = base.get("predicted_latency_ns")
+        print(f"  {kernel:24s} lat {cur['predicted_latency_ns']:10.2f} ns"
+              f" (base {b if b is None else format(b, '10.2f')})"
+              f"  beamΔ {cur['beam_vs_hillclimb_pct']:+.2f}%")
+    if failures:
+        print(f"\nFAIL: {len(failures)} regression(s) "
+              f"(tolerance {TOLERANCE_PCT}%):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"\nOK: {len(metrics)} kernels within {TOLERANCE_PCT}% of "
+          "baseline; beam never worse than hill climb")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+"""Shared hash-seed pin for the deterministic benchmark entry points.
+
+E-node sets iterate in hash order, which drives rule-match ordering and
+plateau tie-breaks in extraction — so any script whose output is
+committed or gated (bench_regression.py, roofline_table.py --kernels)
+must run under one fixed seed or its numbers drift per process.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+
+def reexec_with_fixed_hashseed() -> None:
+    """Re-exec the current script with PYTHONHASHSEED=0 (no-op when the
+    seed is already pinned)."""
+    if os.environ.get("PYTHONHASHSEED") != "0":
+        os.environ["PYTHONHASHSEED"] = "0"
+        os.execv(sys.executable, [sys.executable] + sys.argv)

@@ -27,11 +27,11 @@ GRID = 96  # threads per axis for the CPU vmap grid
 
 def bt_like() -> KernelProgram:
     p = KernelProgram("bt_like")
-    njac = p.array_in("njac")        # (3,3,N)
-    fjac = p.array_in("fjac")        # (3,3,N)
-    u = p.array_in("u")              # (3,N)
+    njac = p.array_in("njac", shape=(3, 3, None))
+    fjac = p.array_in("fjac", shape=(3, 3, None))
+    u = p.array_in("u", shape=(3, None))
     for name in ("lhsa", "lhsb"):
-        p.array_out(name)            # (3,3,N)
+        p.array_out(name, shape=(3, 3, None))
     i = p.scalar("i")
     dt = p.scalar("dt")
     tz1 = p.scalar("tz1")
@@ -55,9 +55,9 @@ def bt_like() -> KernelProgram:
 
 def sp_like() -> KernelProgram:
     p = KernelProgram("sp_like")
-    u = p.array_in("u")
-    ws = p.array_in("ws")
-    p.array_out("rhs")
+    u = p.array_in("u", shape=(None,))
+    ws = p.array_in("ws", shape=(None,))
+    p.array_out("rhs", shape=(None,))
     i = p.scalar("i")
     c1 = p.scalar("c1")
     c2 = p.scalar("c2")
@@ -75,10 +75,10 @@ def sp_like() -> KernelProgram:
 
 def cg_like() -> KernelProgram:
     p = KernelProgram("cg_like")
-    a = p.array_in("a")
-    col = p.array_in("col")
-    x = p.array_in("x")
-    p.array_out("y")
+    a = p.array_in("a", shape=(None,))
+    col = p.array_in("col", shape=(None,))
+    x = p.array_in("x", shape=(None,))
+    p.array_out("y", shape=(None,))
     row = p.scalar("row")
     nnz = p.scalar("nnz")
     p.let("acc", c(0.0))
@@ -91,10 +91,10 @@ def cg_like() -> KernelProgram:
 
 def ep_like() -> KernelProgram:
     p = KernelProgram("ep_like")
-    ax = p.array_in("ax")
-    ay = p.array_in("ay")
-    p.array_out("ox")
-    p.array_out("oy")
+    ax = p.array_in("ax", shape=(None,))
+    ay = p.array_in("ay", shape=(None,))
+    p.array_out("ox", shape=(None,))
+    p.array_out("oy", shape=(None,))
     i = p.scalar("i")
     x = p.let("x", 2.0 * ax[v("i")] - 1.0)
     y = p.let("y", 2.0 * ay[v("i")] - 1.0)
@@ -107,8 +107,8 @@ def ep_like() -> KernelProgram:
 
 def mg_like() -> KernelProgram:
     p = KernelProgram("mg_like")
-    u = p.array_in("u")
-    p.array_out("o")
+    u = p.array_in("u", shape=(None,))
+    p.array_out("o", shape=(None,))
     i = p.scalar("i")
     c0 = p.scalar("c0")
     c1 = p.scalar("c1")
@@ -121,8 +121,8 @@ def mg_like() -> KernelProgram:
 
 def lbm_like() -> KernelProgram:
     p = KernelProgram("lbm_like")
-    f = p.array_in("f")              # (9, N)
-    p.array_out("fo")                # (9, N)
+    f = p.array_in("f", shape=(9, None))
+    p.array_out("fo", shape=(9, None))
     i = p.scalar("i")
     omega = p.scalar("omega")
     loads = [f[c(k), v("i")] for k in range(9)]
@@ -154,12 +154,12 @@ def lbm_like() -> KernelProgram:
 
 def ft_like() -> KernelProgram:
     p = KernelProgram("ft_like")
-    xr = p.array_in("xr")
-    xi = p.array_in("xi")
-    tr = p.array_in("tr")
-    ti = p.array_in("ti")
-    p.array_out("yr")
-    p.array_out("yi")
+    xr = p.array_in("xr", shape=(None,))
+    xi = p.array_in("xi", shape=(None,))
+    tr = p.array_in("tr", shape=(None,))
+    ti = p.array_in("ti", shape=(None,))
+    p.array_out("yr", shape=(None,))
+    p.array_out("yi", shape=(None,))
     i = p.scalar("i")
     ar = xr[v("i")]
     ai = xi[v("i")]

@@ -6,15 +6,17 @@ into one subsystem: per-node FLOP/byte/pass statistics
 (:mod:`.latency`), the extraction objective (:mod:`.cost_model`), and
 the HLO bridge (:mod:`.hlo`).
 """
-from .opstats import (DTYPE_BYTES, TILE_ELEMS, OpStats, node_stats,
-                      op_pass_class, store_stats)
+from .opstats import (DTYPE_BYTES, TILE_ELEMS, TILE_SHAPE, ArrayInfo,
+                      OpStats, dtype_byte_width, node_stats, op_pass_class,
+                      store_stats)
 from .latency import LatencyModel
 from .cost_model import RooflineCostModel
 from .hlo import latency_from_hlo, stats_from_hlo, stats_from_report
 
 __all__ = [
     "OpStats", "node_stats", "op_pass_class", "store_stats",
-    "TILE_ELEMS", "DTYPE_BYTES",
+    "TILE_ELEMS", "TILE_SHAPE", "DTYPE_BYTES",
+    "ArrayInfo", "dtype_byte_width",
     "LatencyModel", "RooflineCostModel",
     "latency_from_hlo", "stats_from_hlo", "stats_from_report",
 ]

@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import TYPE_CHECKING, Dict, Optional
 
-from .opstats import OpStats, TILE_ELEMS
+from .opstats import OpStats, TILE_ELEMS, dtype_byte_width
 
 if TYPE_CHECKING:
     from repro.core.hardware import ChipSpec
@@ -38,14 +38,29 @@ class LatencyModel:
     chip: Optional["ChipSpec"] = None   # None -> DEFAULT_CHIP
     tile_elems: int = TILE_ELEMS
     overlap_slack: float = 0.05
+    # Matrix-unit dtype: the MXU peak scales with operand width (f32 runs
+    # at half the bf16 rate, 8-bit at double it). None keeps the legacy
+    # bf16-peak pricing for callers that never declared a dtype.
+    mxu_dtype: Optional[str] = None
 
     def __post_init__(self):
         if self.chip is None:
             object.__setattr__(self, "chip", _default_chip())
 
+    def mxu_peak_flops(self) -> float:
+        peak = self.chip.peak_flops_bf16
+        if self.mxu_dtype is None:
+            return peak
+        width = dtype_byte_width(self.mxu_dtype)
+        if width >= 4:
+            return peak / 2.0
+        if width == 1:
+            return peak * 2.0
+        return peak
+
     def compute_ns(self, stats: OpStats) -> float:
         vpu_s = stats.vpu_passes * self.tile_elems / self.chip.vpu_elems_per_s
-        mxu_s = stats.mxu_flops / self.chip.peak_flops_bf16
+        mxu_s = stats.mxu_flops / self.mxu_peak_flops()
         return (vpu_s + mxu_s) * 1e9
 
     def memory_ns(self, stats: OpStats) -> float:
@@ -80,4 +95,5 @@ class LatencyModel:
             "latency_ns": self.latency_ns(stats),
             "bound": self.bound(stats),
             "arithmetic_intensity": self.arithmetic_intensity(stats),
+            "n_ops": stats.n_ops,
         }

@@ -16,7 +16,7 @@ predicted latency against the chip peaks.
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING
+from typing import TYPE_CHECKING, Optional, Sequence, Tuple
 
 if TYPE_CHECKING:  # avoid a load-time cycle: repro.core.cost imports us
     from repro.core.ir import ENode
@@ -38,8 +38,69 @@ SIGN_OPS = frozenset({"neg"})                    # folds into FMA operands
 REDUCTIONS = frozenset({"rsum", "rmean", "rmax"})
 
 # Default tile geometry: one (8, 128) f32 vreg tile per term instance.
-TILE_ELEMS = 8 * 128
+TILE_SHAPE = (8, 128)
+TILE_ELEMS = TILE_SHAPE[0] * TILE_SHAPE[1]
 DTYPE_BYTES = 4
+
+# HBM byte width per element for the dtypes the saturator prices. bf16/f16
+# tiles move half the bytes of f32, f8 a quarter — the memory roof scales
+# with the stored width, not the compute width.
+DTYPE_BYTE_WIDTH = {
+    "f64": 8, "i64": 8,
+    "f32": 4, "tf32": 4, "i32": 4,
+    "bf16": 2, "f16": 2, "i16": 2,
+    "f8": 1, "f8_e4m3": 1, "f8_e5m2": 1, "i8": 1, "bool": 1,
+}
+
+
+def dtype_byte_width(dtype: str) -> int:
+    """HBM bytes per element of ``dtype`` (raises on unknown names so a
+    typo'd declaration fails loudly instead of silently pricing as f32)."""
+    try:
+        return DTYPE_BYTE_WIDTH[dtype]
+    except KeyError:
+        raise ValueError(
+            f"unknown dtype {dtype!r}; known: {sorted(DTYPE_BYTE_WIDTH)}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayInfo:
+    """Declared (shape, dtype) of one kernel array — the SSA array table
+    entry the analysis layer prices loads/stores with.
+
+    ``shape=None`` means unknown extent (price a full tile, the pre-shape
+    behavior). A dimension may be ``None`` for a symbolic/runtime extent;
+    any symbolic dimension left after indexing also falls back to a full
+    tile. Known extents are capped at the tile size: one term instance
+    never moves more than one tile per load, but a broadcast scalar or row
+    moves only its true operand extent.
+    """
+    shape: Optional[Tuple[Optional[int], ...]] = None
+    dtype: str = "f32"
+
+    @property
+    def byte_width(self) -> int:
+        return dtype_byte_width(self.dtype)
+
+    def index(self, n_idx: int) -> "ArrayInfo":
+        """Info of the operand left after ``n_idx`` leading indices."""
+        if self.shape is None or n_idx <= 0:
+            return self
+        return ArrayInfo(shape=self.shape[n_idx:], dtype=self.dtype)
+
+    def elems(self, tile_elems: int = TILE_ELEMS) -> int:
+        """Per-tile-instance element extent of this operand."""
+        if self.shape is None:
+            return tile_elems
+        n = 1
+        for d in self.shape:
+            if d is None:       # symbolic dimension: unknown extent
+                return tile_elems
+            n *= int(d)
+        return min(n, tile_elems)
+
+    def bytes(self, tile_elems: int = TILE_ELEMS) -> float:
+        return float(self.elems(tile_elems) * self.byte_width)
 
 # VPU multi-pass issue counts (v5e timing; same rationale as TPUCostModel:
 # transcendentals are 4-8 pass pipelined polynomial sequences, true divide
@@ -126,20 +187,44 @@ def op_pass_class(op: str) -> str:
 
 
 def node_stats(node: ENode, *, tile_elems: int = TILE_ELEMS,
-               dtype_bytes: int = DTYPE_BYTES) -> OpStats:
-    """Hardware statistics of one e-node under tile semantics."""
+               dtype_bytes: int = DTYPE_BYTES,
+               info: Optional[ArrayInfo] = None) -> OpStats:
+    """Hardware statistics of one e-node under tile semantics.
+
+    ``info`` — when the caller resolved the loaded operand's
+    :class:`ArrayInfo` (shape after indexing + dtype), a load is priced at
+    its true operand extent and byte width: a broadcast scalar costs one
+    element, a broadcast row one row, a bf16 tile half an f32 tile.
+    Without it, loads keep the full-f32-tile default.
+    """
     op = node.op
-    tile_bytes = float(tile_elems * dtype_bytes)
     counted = op not in FREE_OPS and op not in INPUT_OPS
     if op in MEMORY_OPS:
-        return OpStats(bytes_read=tile_bytes, n_ops=1)
+        if info is not None:
+            return OpStats(bytes_read=info.bytes(tile_elems), n_ops=1)
+        return OpStats(bytes_read=float(tile_elems * dtype_bytes), n_ops=1)
     passes = _PASSES[op_pass_class(op)]
     flops = _FLOPS_PER_ELEM.get(op, 0) * float(tile_elems)
     return OpStats(flops=flops, vpu_passes=passes, n_ops=1 if counted else 0)
 
 
 def store_stats(n_stores: int, *, tile_elems: int = TILE_ELEMS,
-                dtype_bytes: int = DTYPE_BYTES) -> OpStats:
+                dtype_bytes: int = DTYPE_BYTES,
+                infos: Optional[Sequence[Optional[ArrayInfo]]] = None
+                ) -> OpStats:
     """Write traffic of a term's root stores (constant across extraction
-    choices — reported, never part of the minimized objective)."""
+    choices — reported, never part of the minimized objective).
+
+    With ``infos`` (one entry per store, ``None`` = unknown) each store is
+    priced at its target operand's true extent and byte width instead of a
+    full f32 tile; ``n_stores`` is then ignored in favor of the list.
+    """
+    if infos is not None:
+        total = 0.0
+        for inf in infos:
+            if inf is None:
+                total += float(tile_elems * dtype_bytes)
+            else:
+                total += inf.bytes(tile_elems)
+        return OpStats(bytes_written=total)
     return OpStats(bytes_written=float(n_stores * tile_elems * dtype_bytes))

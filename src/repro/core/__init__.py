@@ -7,8 +7,10 @@ from .dsl import (ArrayHandle, Expr, KernelProgram, c, call, exp, fma,
                   gelu_tanh, log, maximum, minimum, recip, rmax, rmean,
                   rothalf, rsqrt, rsum, select, sigmoid, silu, softplus,
                   sqrt, square, tanh, toint, v)
+from .beam import BeamStats, beam_search
 from .egraph import EGraph, P, Pattern, PatVar, V, add_expr
-from .extract import ExtractionResult, extract_dag, extract_exact
+from .extract import (ExtractionResult, extract_dag, extract_exact,
+                      optimality_gap)
 from .ir import ENode
 from .jaxpr_bridge import BridgeUnsupported, maybe_saturate, saturate_jax_fn
 from .pallasgen import PallasGenerator, TileOp, make_tile_op, pick_row_block
@@ -23,6 +25,7 @@ __all__ = [
     "CostModel", "TPUCostModel", "count_flops", "count_ops",
     "instruction_mix", "ArrayHandle", "Expr", "KernelProgram", "EGraph",
     "ENode", "ExtractionResult", "extract_dag", "extract_exact",
+    "BeamStats", "beam_search", "optimality_gap",
     "BridgeUnsupported", "maybe_saturate", "saturate_jax_fn",
     "PallasGenerator", "TileOp", "make_tile_op", "pick_row_block", "MODES",
     "SaturatedKernel", "SaturatorConfig", "saturate_all_modes",

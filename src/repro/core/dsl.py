@@ -132,30 +132,47 @@ class For:
 class ArraySpec:
     name: str
     role: str  # 'in' | 'out' | 'inout'
+    # Declared operand geometry, consumed by the analysis layer to price
+    # HBM traffic at the true extent/byte width (None = unknown: a full
+    # f32 tile). A dim may be None for a symbolic/runtime extent.
+    shape: Optional[Tuple[Optional[int], ...]] = None
+    dtype: str = "f32"
 
 
 class KernelProgram:
-    """Builder for one saturable kernel (body of one parallel region)."""
+    """Builder for one saturable kernel (body of one parallel region).
 
-    def __init__(self, name: str):
+    ``dtype`` is the kernel's default element type; per-array ``shape`` /
+    ``dtype`` declarations refine it so the extraction cost model prices
+    bf16/f8 tiles and broadcast scalars/rows honestly.
+    """
+
+    def __init__(self, name: str, dtype: str = "f32"):
         self.name = name
+        self.dtype = dtype
         self.arrays: Dict[str, ArraySpec] = {}
         self.scalars: List[str] = []
         self.body: List[Any] = []
         self._stack: List[List[Any]] = [self.body]
 
     # ---- declarations -----------------------------------------------------
-    def array_in(self, name: str) -> "ArrayHandle":
-        self.arrays[name] = ArraySpec(name, "in")
+    def _declare(self, name: str, role: str, shape, dtype) -> "ArrayHandle":
+        self.arrays[name] = ArraySpec(
+            name, role, shape=tuple(shape) if shape is not None else None,
+            dtype=dtype or self.dtype)
         return ArrayHandle(self, name)
 
-    def array_out(self, name: str) -> "ArrayHandle":
-        self.arrays[name] = ArraySpec(name, "out")
-        return ArrayHandle(self, name)
+    def array_in(self, name: str, shape: Optional[Sequence[Optional[int]]]
+                 = None, dtype: Optional[str] = None) -> "ArrayHandle":
+        return self._declare(name, "in", shape, dtype)
 
-    def array_inout(self, name: str) -> "ArrayHandle":
-        self.arrays[name] = ArraySpec(name, "inout")
-        return ArrayHandle(self, name)
+    def array_out(self, name: str, shape: Optional[Sequence[Optional[int]]]
+                  = None, dtype: Optional[str] = None) -> "ArrayHandle":
+        return self._declare(name, "out", shape, dtype)
+
+    def array_inout(self, name: str, shape: Optional[Sequence[Optional[int]]]
+                    = None, dtype: Optional[str] = None) -> "ArrayHandle":
+        return self._declare(name, "inout", shape, dtype)
 
     def scalar(self, name: str) -> Expr:
         if name not in self.scalars:
@@ -171,7 +188,7 @@ class KernelProgram:
               *indices) -> None:
         name = array.name if isinstance(array, ArrayHandle) else array
         if name not in self.arrays:
-            self.arrays[name] = ArraySpec(name, "out")
+            self.arrays[name] = ArraySpec(name, "out", dtype=self.dtype)
         idx = tuple(_t(i) for i in indices)
         self._stack[-1].append(Assign(ArrayRef(name, idx), _t(expr)))
 

@@ -10,6 +10,8 @@ from __future__ import annotations
 import time
 from typing import Any, Dict, Iterable, List, Optional, Set, Tuple
 
+from repro.analysis.opstats import ArrayInfo
+
 from .ir import ENode, try_const_eval
 
 
@@ -48,7 +50,7 @@ class UnionFind:
 
 
 class EClass:
-    __slots__ = ("id", "nodes", "parents", "data")
+    __slots__ = ("id", "nodes", "parents", "data", "ainfo")
 
     def __init__(self, cid: int):
         self.id = cid
@@ -56,6 +58,10 @@ class EClass:
         # (parent_enode_as_added, parent_class_id)
         self.parents: List[Tuple[ENode, int]] = []
         self.data: Any = None  # analysis value: folded constant or None
+        # array-operand analysis: the (shape, dtype) this class denotes
+        # when realized as an array symbol or load (None = not a memory
+        # operand / unknown). Priced by the roofline cost model.
+        self.ainfo: Optional[ArrayInfo] = None
 
 
 class EGraph:
@@ -68,6 +74,33 @@ class EGraph:
         self.pending: List[int] = []  # classes whose parents need re-canon
         self.enable_const_fold = enable_const_fold
         self.n_unions = 0
+        # SSA array table: base array name -> declared (shape, dtype).
+        # Version symbols ("f@2", "f@L0") all resolve through their base
+        # name, so every load of any version prices the same operand.
+        self.array_info: Dict[str, ArrayInfo] = {}
+        # bumped on every (re)declaration so bound cost models can tell
+        # their cached load prices are stale (RooflineCostModel checks
+        # this on bind_egraph; extract_dag rebinds per extraction)
+        self.ainfo_version = 0
+
+    def set_array_info(self, name: str, info: ArrayInfo) -> None:
+        """Register an array declaration; re-derives (and overwrites) the
+        analysis for any already-added symbol/load classes of that
+        array, so late or corrected declarations take effect. Cost
+        models bound to this graph pick the change up on their next
+        ``bind_egraph`` (which every ``extract_dag`` call performs)."""
+        self.array_info[name] = info
+        self.ainfo_version += 1
+        for node, cid in list(self.hashcons.items()):
+            if node.op == "array" and self._array_base(node.payload) == name:
+                self._analyze_ainfo(cid, node, overwrite=True)
+                for pnode, pcid in self.classes[self.find(cid)].parents:
+                    self._analyze_ainfo(pcid, self.canonicalize(pnode),
+                                        overwrite=True)
+
+    @staticmethod
+    def _array_base(version_sym: Any) -> str:
+        return str(version_sym).split("@", 1)[0]
 
     # -- basics ---------------------------------------------------------------
     def find(self, cid: int) -> int:
@@ -96,6 +129,7 @@ class EGraph:
         for ch in set(node.children):
             self.classes[self.find(ch)].parents.append((node, cid))
         self._analyze_node(cid, node)
+        self._analyze_ainfo(cid, node)
         return cid
 
     def add_term(self, op: str, children: Iterable[int] = (),
@@ -119,6 +153,55 @@ class EGraph:
             const_id = self.add(ENode("const", (), val))
             self.union(cid, const_id)
 
+    def operand_info(self, info: Optional[ArrayInfo],
+                     index_cids) -> Optional[ArrayInfo]:
+        """Operand actually moved by an access of ``info`` at
+        ``index_cids``.
+
+        A *uniform* index (constant-folded e-class) selects one
+        coordinate, shrinking the operand; a varying index (anything
+        else, e.g. the thread/grid scalar) addresses a distinct element
+        per lane, so the access still moves a full tile — only the
+        declared dtype survives. This is what makes broadcast scalars/
+        rows cheap without under-pricing per-lane gathers.
+        """
+        if info is None:
+            return None
+        index_cids = tuple(index_cids)
+        if not index_cids:
+            return info
+        for c in index_cids:
+            ec = self.classes.get(self.find(c))
+            if ec is None or ec.data is None:
+                return ArrayInfo(shape=None, dtype=info.dtype)
+        return info.index(len(index_cids))
+
+    def load_operand_info(self, node: ENode) -> Optional[ArrayInfo]:
+        """Operand a ``load`` e-node moves (resolved at query time, so
+        constants folded after the load was added are honored)."""
+        if node.op != "load" or not node.children:
+            return None
+        ec = self.classes.get(self.find(node.children[0]))
+        info = ec.ainfo if ec is not None else None
+        return self.operand_info(info, node.children[1:])
+
+    def _infer_ainfo(self, node: ENode) -> Optional[ArrayInfo]:
+        """Array-operand analysis of one e-node (None = not an operand)."""
+        if node.op == "array":
+            return self.array_info.get(self._array_base(node.payload))
+        if node.op == "load":
+            return self.load_operand_info(node)
+        return None
+
+    def _analyze_ainfo(self, cid: int, node: ENode,
+                       overwrite: bool = False) -> None:
+        info = self._infer_ainfo(node)
+        if info is None:
+            return
+        ec = self.classes[self.find(cid)]
+        if ec.ainfo is None or overwrite:
+            ec.ainfo = info
+
     # -- union + rebuild --------------------------------------------------------
     def union(self, a: int, b: int) -> int:
         ra, rb = self.find(a), self.find(b)
@@ -133,6 +216,11 @@ class EGraph:
         # analysis merge: constants must agree; propagate if one-sided
         if ec_root.data is None and ec_other.data is not None:
             ec_root.data = ec_other.data
+        # array-operand analysis: one-sided propagation; on disagreement
+        # keep the root's (classes only merge when semantically equal, so
+        # either description of the operand is a valid pricing basis)
+        if ec_root.ainfo is None and ec_other.ainfo is not None:
+            ec_root.ainfo = ec_other.ainfo
         del self.classes[other]
         self.pending.append(root)
         return root
@@ -248,11 +336,18 @@ class EGraph:
         from .extract import extract_dag
         return extract_dag(self, roots, cost_model=cost_model, **kw)
 
-    def choice_stats(self, choice, roots, n_stores: int = 0):
+    def choice_stats(self, choice, roots, n_stores: int = 0,
+                     store_infos=None, cost_model=None):
         """Roofline statistics (flops/bytes/latency) of an extraction
         choice map — the unified analysis view of a selected term.
+
         ``n_stores`` adds the root stores' HBM write traffic (constant
-        across choices, so reported but never minimized)."""
+        across choices, so reported but never minimized); ``store_infos``
+        (one :class:`ArrayInfo` or None per store) prices each store at
+        its target's true extent/byte width instead of a full f32 tile.
+        ``cost_model`` overrides the default shape/dtype-aware roofline
+        model bound to this e-graph.
+        """
         from repro.analysis import RooflineCostModel, store_stats
         from .extract import choice_nodes
         if isinstance(roots, int):
@@ -260,8 +355,11 @@ class EGraph:
         nodes = choice_nodes(self, choice, roots)
         if nodes is None:
             return None
-        cm = RooflineCostModel()
-        stats = cm.choice_stats(nodes) + store_stats(n_stores)
+        cm = cost_model if cost_model is not None \
+            else RooflineCostModel(egraph=self)
+        stats = cm.choice_stats(nodes) + store_stats(
+            n_stores, dtype_bytes=getattr(cm, "dtype_bytes", 4),
+            infos=store_infos)
         return cm.latency.report(stats)
 
 

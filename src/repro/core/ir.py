@@ -67,7 +67,17 @@ class ENode:
         return self._key() == other._key()
 
     def __hash__(self):
-        return hash(self._key())
+        # hash(None) is id-based in CPython <= 3.11, i.e. different per
+        # process under ASLR — which would reorder e-node sets (and with
+        # them rule-match/union order, e-class numbering, and extraction
+        # tie-breaks) from run to run even under a fixed PYTHONHASHSEED.
+        # Substitute a stable sentinel so e-graph construction is
+        # reproducible; equality semantics are unchanged.
+        payload = self.payload
+        if payload is None:
+            payload = "\0none"
+        return hash((self.op, self.children,
+                     type(self.payload).__name__, payload))
 
     def map_children(self, f: Callable[[int], int]) -> "ENode":
         if not self.children:

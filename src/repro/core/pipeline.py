@@ -27,13 +27,14 @@ from .codegen import CodeGenerator, GeneratedKernel
 from .cost import CostModel, TPUCostModel
 from .dsl import KernelProgram
 from .egraph import EGraph
-from .extract import ExtractionResult, extract_dag
+from .extract import SEARCH_STRATEGIES, ExtractionResult, extract_dag
 from .rules import (EXTENDED_RULES, PAPER_RULES, TPU_RULES, Rule,
                     SaturationReport, run_rules)
 from .ssa import SSAResult, build_ssa
 
 MODES = ("baseline", "cse", "cse_sat", "cse_bulk", "accsat")
 COST_MODELS = ("paper", "tpu_v5e", "roofline")
+SEARCHES = SEARCH_STRATEGIES  # single source of truth: repro.core.extract
 
 
 @dataclasses.dataclass
@@ -50,6 +51,14 @@ class SaturatorConfig:
     extended_rules: bool = False   # §V-A restricted set (off, as in paper)
     tpu_rules: bool = False        # beyond-paper strength reduction
     local_search: bool = True      # DAG-cost refinement (ILP stand-in)
+    # global extraction strategy: beam search (default, hill climb kept as
+    # the polish pass) or 'hillclimb' (the PR-2 extractor, for ablations);
+    # beam_expansions / hillclimb_evals are the deterministic search
+    # budgets (scored swaps) — wall clocks are only safety nets
+    search: str = "beam"
+    beam_width: int = 8
+    beam_expansions: int = 10_000
+    hillclimb_evals: int = 100_000
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -57,6 +66,9 @@ class SaturatorConfig:
         if self.cost_model not in COST_MODELS:
             raise ValueError(f"cost_model must be one of {COST_MODELS}, "
                              f"got {self.cost_model}")
+        if self.search not in SEARCHES:
+            raise ValueError(f"search must be one of {SEARCHES}, "
+                             f"got {self.search}")
 
     @property
     def use_sat(self) -> bool:
@@ -78,9 +90,14 @@ class SaturatorConfig:
             rules += [r for r in TPU_RULES if "NOP" not in r.name]
         return rules
 
-    def make_cost_model(self) -> CostModel:
+    def make_cost_model(self, prog: Optional[KernelProgram] = None
+                        ) -> CostModel:
         if self.cost_model == "roofline":
-            return RooflineCostModel()
+            # thread the kernel's declared dtype through the roofline
+            # objective (per-array shapes/dtypes resolve later, when
+            # extract_dag binds the model to the e-graph)
+            dtype = getattr(prog, "dtype", None) or "f32"
+            return RooflineCostModel(dtype=dtype)
         return TPUCostModel() if self.cost_model == "tpu_v5e" else CostModel()
 
 
@@ -109,9 +126,15 @@ class SaturatedKernel:
     def report(self) -> Dict[str, Any]:
         s = self.kernel.stats
         pred = self.extraction.predicted or {}
+        bs = self.extraction.beam_stats
         return {
             "mode": self.config.mode,
             "cost_model": self.config.cost_model,
+            "search": self.extraction.search,
+            "beam_width": self.config.beam_width,
+            "beam_cost": self.extraction.beam_cost,
+            "beam_generations": bs.generations if bs else 0,
+            "beam_expanded": bs.expanded if bs else 0,
             "dag_cost": self.extraction.dag_cost,
             "tree_cost": self.extraction.tree_cost,
             "predicted_flops": pred.get("flops", 0.0),
@@ -137,6 +160,21 @@ class SaturatedKernel:
         }
 
 
+def predict_choice(ssa: SSAResult, choice, roots, n_stores: int):
+    """Roofline prediction of an extraction choice in the pipeline's
+    reporting units: shape/dtype-aware load pricing bound to the SSA
+    e-graph, plus the root stores' write traffic (per-store operand info
+    when the SSA store count matches codegen's). Shared with
+    ``benchmarks/saturation_stats.py`` so beam-vs-hillclimb deltas are
+    always computed in these exact units."""
+    store_infos = ssa.store_infos()
+    return ssa.egraph.choice_stats(
+        choice, roots, n_stores=n_stores,
+        store_infos=store_infos if len(store_infos) == n_stores else None,
+        cost_model=RooflineCostModel(
+            dtype=getattr(ssa.prog, "dtype", "f32"), egraph=ssa.egraph))
+
+
 def saturate_program(prog: KernelProgram,
                      config: Optional[SaturatorConfig] = None,
                      extra_fns: Optional[Dict[str, Callable]] = None
@@ -154,9 +192,12 @@ def saturate_program(prog: KernelProgram,
     roots = ssa.roots()
     extraction = extract_dag(
         ssa.egraph, tuple(roots) if roots else (),
-        cost_model=cfg.make_cost_model(),
+        cost_model=cfg.make_cost_model(prog),
         time_limit_s=cfg.extract_time_limit_s,
-        local_search=cfg.local_search and cfg.use_cse)
+        local_search=cfg.local_search and cfg.use_cse,
+        search=cfg.search, beam_width=cfg.beam_width,
+        beam_expansions=cfg.beam_expansions,
+        hillclimb_evals=cfg.hillclimb_evals)
     t1 = time.perf_counter()
     gen = CodeGenerator(ssa, extraction, bulk=cfg.use_bulk,
                         extra_fns=extra_fns,
@@ -164,9 +205,10 @@ def saturate_program(prog: KernelProgram,
     codegen_wall = time.perf_counter() - t1
     # Roofline prediction of the chosen term including root-store write
     # traffic (known only post-codegen), regardless of which cost model
-    # drove extraction — ablations compare in the same units.
-    predicted = ssa.egraph.choice_stats(extraction.choice, extraction.roots,
-                                        n_stores=gen.stats.n_stores)
+    # drove extraction — ablations compare in the same units. Stores are
+    # priced per target operand (shape after indexing, declared dtype).
+    predicted = predict_choice(ssa, extraction.choice, extraction.roots,
+                               gen.stats.n_stores)
     if predicted is not None:
         extraction.predicted = predicted
     return SaturatedKernel(kernel=gen, ssa=ssa, extraction=extraction,

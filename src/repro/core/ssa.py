@@ -19,6 +19,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, List, Optional, Sequence, Set, Tuple, Union
 
+from repro.analysis.opstats import ArrayInfo
+
 from .dsl import ArrayRef, Assign, For, If, KernelProgram
 from .egraph import EGraph
 from .ir import ENode
@@ -87,6 +89,27 @@ class SSAResult:
     # e-classes the programmer named with `let` — the 'original code'
     # temporaries (baseline codegen reuses exactly these, §VIII)
     let_cids: Set[int] = dataclasses.field(default_factory=set)
+    # SSA array table: array name -> declared (shape, dtype). Mirrors
+    # egraph.array_info; the analysis layer prices loads/stores with it.
+    array_info: Dict[str, ArrayInfo] = dataclasses.field(default_factory=dict)
+
+    def store_infos(self) -> List[Optional[ArrayInfo]]:
+        """Per-store operand info (array info after indexing), in program
+        order — what each root store actually writes to HBM. Indexing
+        semantics mirror loads: uniform (constant) indices slice the
+        operand, varying indices keep a full per-lane tile."""
+        out: List[Optional[ArrayInfo]] = []
+
+        def walk(region: Region):
+            for item in region.items:
+                if isinstance(item, StoreEffect):
+                    info = self.array_info.get(item.array)
+                    out.append(self.egraph.operand_info(info,
+                                                        item.index_cids))
+                else:
+                    walk(item.body)
+        walk(self.region)
+        return out
 
     def roots(self) -> List[int]:
         """Every e-class the codegen will need (extraction roots)."""
@@ -139,7 +162,15 @@ class SSABuilder:
         return self.eg.add(ENode("array", (), version))
 
     def build(self) -> SSAResult:
+        array_info: Dict[str, ArrayInfo] = {}
         for name, spec in self.prog.arrays.items():
+            # record the declared (shape, dtype) in the array table and
+            # register it with the e-graph's operand analysis up front,
+            # before any load/store of the array is added
+            info = ArrayInfo(shape=getattr(spec, "shape", None),
+                             dtype=getattr(spec, "dtype", "f32"))
+            array_info[name] = info
+            self.eg.set_array_info(name, info)
             if spec.role in ("in", "inout"):
                 ver = f"{name}@0"
                 self.versions[name] = ver
@@ -153,7 +184,7 @@ class SSABuilder:
             final_versions=dict(self.versions),
             version_origin=dict(self.version_origin),
             n_loads=self.n_loads, n_stores=self.n_stores,
-            let_cids=set(self.let_cids))
+            let_cids=set(self.let_cids), array_info=array_info)
 
     # -- expression -> e-class ------------------------------------------------
     def eval_expr(self, t: tuple) -> int:

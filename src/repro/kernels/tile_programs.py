@@ -21,13 +21,19 @@ from repro.core import (KernelProgram, SaturatorConfig, c, gelu_tanh, log,
 _DEFAULT_CFG = SaturatorConfig(mode="accsat", cost_model="tpu_v5e",
                                tpu_rules=True)
 
+# Declared operand geometry for the analysis layer: the model hot-spots
+# run on one (8, 128) vreg tile; norm gains/biases are broadcast rows,
+# so a load of them moves one row of HBM, not a full tile.
+TILE = (8, 128)
+ROW = (1, 128)
+
 
 def rmsnorm_program() -> KernelProgram:
     """y = x * rsqrt(mean(x^2) + eps) * g   (pre-norm used by all LMs here)."""
     p = KernelProgram("rmsnorm")
-    x = p.array_in("x")
-    g = p.array_in("g")
-    p.array_out("o")
+    x = p.array_in("x", shape=TILE)
+    g = p.array_in("g", shape=ROW)   # gain: one broadcast row per tile
+    p.array_out("o", shape=TILE)
     eps = p.scalar("eps")
     xv = x.load()
     inv = rsqrt(rmean(xv * xv) + eps)
@@ -38,10 +44,10 @@ def rmsnorm_program() -> KernelProgram:
 def rmsnorm_gated_program() -> KernelProgram:
     """Mamba2 gated norm: y = rmsnorm(x * silu(z)) * g."""
     p = KernelProgram("rmsnorm_gated")
-    x = p.array_in("x")
-    z = p.array_in("z")
-    g = p.array_in("g")
-    p.array_out("o")
+    x = p.array_in("x", shape=TILE)
+    z = p.array_in("z", shape=TILE)
+    g = p.array_in("g", shape=ROW)
+    p.array_out("o", shape=TILE)
     eps = p.scalar("eps")
     xg = x.load() * silu(z.load())
     inv = rsqrt(rmean(xg * xg) + eps)
@@ -52,10 +58,10 @@ def rmsnorm_gated_program() -> KernelProgram:
 def layernorm_program() -> KernelProgram:
     """Whisper uses true LayerNorm: y = (x - mu) * rsqrt(var + eps) * g + b."""
     p = KernelProgram("layernorm")
-    x = p.array_in("x")
-    g = p.array_in("g")
-    b = p.array_in("b")
-    p.array_out("o")
+    x = p.array_in("x", shape=TILE)
+    g = p.array_in("g", shape=ROW)
+    b = p.array_in("b", shape=ROW)
+    p.array_out("o", shape=TILE)
     eps = p.scalar("eps")
     xv = x.load()
     mu = rmean(xv)
@@ -68,9 +74,9 @@ def layernorm_program() -> KernelProgram:
 def swiglu_program() -> KernelProgram:
     """SwiGLU combine: o = silu(a) * b (a = gate proj, b = up proj)."""
     p = KernelProgram("swiglu")
-    a = p.array_in("a")
-    b = p.array_in("b")
-    p.array_out("o")
+    a = p.array_in("a", shape=TILE)
+    b = p.array_in("b", shape=TILE)
+    p.array_out("o", shape=TILE)
     p.store("o", silu(a.load()) * b.load())
     return p
 
@@ -110,8 +116,8 @@ def residual_scale_program() -> KernelProgram:
 def softmax_program() -> KernelProgram:
     """Row softmax via reciprocal-multiply (div is 100-cost, §V-B)."""
     p = KernelProgram("softmax")
-    x = p.array_in("x")
-    p.array_out("o")
+    x = p.array_in("x", shape=TILE)
+    p.array_out("o", shape=TILE)
     xv = x.load()
     e = exp(xv - rmax(xv))
     p.store("o", e * recip(rsum(e)))

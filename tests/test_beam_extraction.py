@@ -1,0 +1,207 @@
+"""Beam-search extraction (PR 3 tentpole): beam vs hill climb vs the
+brute-force oracle, the fast evaluator's exactness, and the enriched
+unextractable-root diagnostics."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (CostModel, EGraph, TPUCostModel, add_expr,
+                        extract_dag, extract_exact, optimality_gap)
+from repro.core.beam import BeamStats, Evaluator, beam_search
+from repro.core.egraph import EClass
+from repro.core.extract import _tree_costs, dag_cost_of
+from repro.core.ir import ENode
+from repro.core.rules import PAPER_RULES, run_rules
+from repro.analysis import RooflineCostModel
+
+from helpers import random_term
+
+
+def _saturated_graph(seed: int, depth: int, iters: int = 3,
+                     nodes: int = 200):
+    rng = np.random.default_rng(seed)
+    eg = EGraph()
+    root = add_expr(eg, random_term(rng, depth))
+    run_rules(eg, PAPER_RULES, iter_limit=iters, node_limit=nodes)
+    return eg, root
+
+
+# -- beam never worse than the hill climb ------------------------------------------
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_beam_never_worse_than_hillclimb(seed):
+    """Property: on random saturated e-graphs, beam extraction's DAG cost
+    is never worse than the PR-2 multi-start hill climb's (the beam
+    polishes the same restart seeds)."""
+    eg, root = _saturated_graph(seed, depth=3)
+    beam = extract_dag(eg, root, time_limit_s=10.0, search="beam")
+    hill = extract_dag(eg, root, time_limit_s=10.0, search="hillclimb")
+    assert beam.dag_cost <= hill.dag_cost + 1e-9
+    assert beam.search == "beam" and hill.search == "hillclimb"
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_beam_never_worse_flat_model(seed):
+    """Same property under the paper's flat-weight objective."""
+    eg, root = _saturated_graph(seed, depth=3)
+    cm = CostModel()
+    beam = extract_dag(eg, root, cost_model=cm, time_limit_s=10.0,
+                       search="beam")
+    hill = extract_dag(eg, root, cost_model=CostModel(),
+                       time_limit_s=10.0, search="hillclimb")
+    assert beam.dag_cost <= hill.dag_cost + 1e-9
+
+
+# -- oracle agreement on tiny graphs ------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_beam_matches_exact_on_small_graphs(seed):
+    """On e-graphs with <= 6 classes the beam matches the brute-force
+    oracle exactly (zero optimality gap)."""
+    rng = np.random.default_rng(seed)
+    eg = EGraph()
+    root = add_expr(eg, random_term(rng, 1))
+    run_rules(eg, PAPER_RULES, iter_limit=2, node_limit=40)
+    if eg.num_classes() > 6:
+        pytest.skip("grew past 6 classes")
+    exact = extract_exact(eg, root, max_combos=100_000)
+    beam = extract_dag(eg, root, time_limit_s=10.0, search="beam")
+    assert beam.dag_cost == pytest.approx(exact.dag_cost, abs=1e-9)
+    gap = optimality_gap(eg, beam, max_classes=6)
+    assert gap == pytest.approx(0.0, abs=1e-12)
+
+
+def test_optimality_gap_none_on_large_graphs():
+    eg = EGraph()
+    root = add_expr(eg, ("add", ("var", "a"),
+                         ("mul", ("var", "b"),
+                          ("add", ("var", "c"), ("var", "d")))))
+    run_rules(eg, PAPER_RULES, iter_limit=4, node_limit=2000)
+    assert eg.num_classes() > 6
+    res = extract_dag(eg, root, time_limit_s=5.0)
+    assert optimality_gap(eg, res, max_classes=6) is None
+
+
+# -- the fast evaluator is exact ----------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_evaluator_matches_dag_cost_of(seed):
+    """Evaluator (the beam's hot path) agrees with the reference
+    dag_cost_of scoring for both model families."""
+    eg, root = _saturated_graph(seed, depth=3)
+    roots = (eg.find(root),)
+    for cm in (RooflineCostModel(egraph=eg), CostModel(), TPUCostModel()):
+        _, choice = _tree_costs(eg, cm)
+        ev = Evaluator(eg, cm)
+        want = dag_cost_of(eg, cm, choice, roots)
+        got = ev.cost(choice.get, roots)
+        assert got == pytest.approx(want, rel=1e-12)
+
+
+def test_evaluator_detects_cycle_and_incomplete():
+    eg = EGraph()
+    a = add_expr(eg, ("add", ("var", "x"), ("var", "y")))
+    cm = CostModel()
+    ev = Evaluator(eg, cm)
+    # incomplete: no binding for the root
+    assert ev.cost({}.get, (eg.find(a),)) == float("inf")
+
+
+# -- beam knobs ---------------------------------------------------------------------
+def test_beam_width_one_still_valid():
+    eg, root = _saturated_graph(11, depth=3)
+    wide = extract_dag(eg, root, time_limit_s=10.0, beam_width=8)
+    narrow = extract_dag(eg, root, time_limit_s=10.0, beam_width=1)
+    assert np.isfinite(narrow.dag_cost)
+    assert wide.dag_cost <= narrow.dag_cost + 1e-9
+
+
+def test_beam_width_zero_rejected():
+    eg = EGraph()
+    root = add_expr(eg, ("add", ("var", "x"), ("var", "y")))
+    cm = RooflineCostModel(egraph=eg)
+    _, choice = _tree_costs(eg, cm)
+    with pytest.raises(ValueError, match="width"):
+        beam_search(eg, cm, [choice], (root,), width=0)
+
+
+def test_extract_dag_rejects_unknown_search():
+    eg = EGraph()
+    root = add_expr(eg, ("var", "x"))
+    with pytest.raises(ValueError, match="search"):
+        extract_dag(eg, root, search="annealing")
+
+
+def test_beam_stats_populated():
+    eg, root = _saturated_graph(2, depth=3)
+    res = extract_dag(eg, root, time_limit_s=10.0, search="beam")
+    assert res.beam_stats is not None
+    assert res.beam_stats.width == 8
+    assert res.beam_stats.expanded >= 0
+    assert res.beam_cost <= res.beam_stats.seed_cost + 1e-9
+    # the polish pass can only improve on the beam stage
+    assert res.dag_cost <= res.beam_cost + 1e-9
+
+
+def test_beam_expansion_cap_deterministic():
+    """Two runs with the same expansion budget land on the same cost."""
+    eg, root = _saturated_graph(9, depth=4, iters=4, nodes=1500)
+    a = extract_dag(eg, root, time_limit_s=30.0, beam_expansions=500)
+    b = extract_dag(eg, root, time_limit_s=30.0, beam_expansions=500)
+    assert a.dag_cost == b.dag_cost
+
+
+def test_hillclimb_eval_budget_deterministic():
+    """The hill climb stops on its evaluation budget, not the wall
+    clock: repeated runs with a budget small enough to bind mid-search
+    still produce identical costs (the bench-regression gate's
+    machine-independence relies on this)."""
+    eg, root = _saturated_graph(21, depth=4, iters=4, nodes=1500)
+    runs = [extract_dag(eg, root, search="hillclimb", time_limit_s=30.0,
+                        hillclimb_evals=700).dag_cost for _ in range(3)]
+    assert runs[0] == runs[1] == runs[2]
+
+
+# -- unextractable-root diagnostics (PR 3 bugfix) -----------------------------------
+def _cyclic_graph():
+    """Two classes whose only nodes reference each other — extraction of
+    either root is impossible (the blocking-cycle case)."""
+    eg = EGraph()
+    a = eg.uf.make()
+    eg.classes[a] = EClass(a)
+    b = eg.uf.make()
+    eg.classes[b] = EClass(b)
+    eg.classes[a].nodes.add(ENode("neg", (b,)))
+    eg.classes[b].nodes.add(ENode("sqrt", (a,)))
+    return eg, a, b
+
+
+def test_unextractable_root_message_lists_nodes_and_cycle():
+    eg, a, b = _cyclic_graph()
+    with pytest.raises(ValueError) as ei:
+        extract_dag(eg, a)
+    msg = str(ei.value)
+    assert f"no extractable term for e-class {a}" in msg
+    assert "available e-nodes" in msg
+    assert "neg" in msg                      # the root's own candidates
+    assert f"blocked by e-class(es) [{b}]" in msg
+    assert "blocking cycle:" in msg
+    assert f"{a} -> {b} -> {a}" in msg
+
+
+def test_unextractable_root_message_empty_class():
+    eg = EGraph()
+    a = eg.uf.make()
+    eg.classes[a] = EClass(a)
+    with pytest.raises(ValueError, match="contains no e-nodes"):
+        extract_dag(eg, a)
+
+
+def test_extractable_roots_unaffected_by_diagnostics():
+    """Regression guard: ordinary extraction still works and raises
+    nothing."""
+    eg = EGraph()
+    root = add_expr(eg, ("mul", ("var", "a"), ("var", "b")))
+    res = extract_dag(eg, root)
+    assert np.isfinite(res.dag_cost)

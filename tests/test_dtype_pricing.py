@@ -1,0 +1,207 @@
+"""Shape/dtype-aware roofline pricing (PR 3 tentpole): bf16/f8 byte
+widths, broadcast scalar/row operand extents, uniform-vs-varying index
+semantics, and the dtype threading through the whole pipeline."""
+import pytest
+
+from repro.analysis import (ArrayInfo, LatencyModel, RooflineCostModel,
+                            TILE_ELEMS, dtype_byte_width, node_stats,
+                            store_stats)
+from repro.core import EGraph, KernelProgram, SaturatorConfig, add_expr, c, v
+from repro.core.hardware import DEFAULT_CHIP
+from repro.core.ir import ENode
+from repro.core.pipeline import saturate_program
+from repro.core.ssa import build_ssa
+
+
+# -- dtype byte widths --------------------------------------------------------------
+def test_dtype_byte_widths():
+    assert dtype_byte_width("f32") == 4
+    assert dtype_byte_width("bf16") == 2
+    assert dtype_byte_width("f16") == 2
+    assert dtype_byte_width("f8") == 1
+    assert dtype_byte_width("f64") == 8
+
+
+def test_unknown_dtype_raises():
+    with pytest.raises(ValueError, match="unknown dtype"):
+        dtype_byte_width("q4")
+
+
+# -- per-node pricing with ArrayInfo ------------------------------------------------
+def test_bf16_tile_halves_hbm_bytes():
+    load = ENode("load", (0,))
+    f32 = node_stats(load, info=ArrayInfo(shape=(8, 128), dtype="f32"))
+    bf16 = node_stats(load, info=ArrayInfo(shape=(8, 128), dtype="bf16"))
+    f8 = node_stats(load, info=ArrayInfo(shape=(8, 128), dtype="f8"))
+    assert f32.bytes_read == TILE_ELEMS * 4
+    assert bf16.bytes_read == f32.bytes_read / 2
+    assert f8.bytes_read == f32.bytes_read / 4
+
+
+def test_broadcast_row_and_scalar_extents():
+    load = ENode("load", (0,))
+    row = node_stats(load, info=ArrayInfo(shape=(1, 128), dtype="f32"))
+    scalar = node_stats(load, info=ArrayInfo(shape=(), dtype="f32"))
+    assert row.bytes_read == 128 * 4       # one row, not a full tile
+    assert scalar.bytes_read == 4          # one element
+    # unknown shape falls back to the full tile at the declared width
+    unknown = node_stats(load, info=ArrayInfo(shape=None, dtype="bf16"))
+    assert unknown.bytes_read == TILE_ELEMS * 2
+
+
+def test_extent_capped_at_tile():
+    load = ENode("load", (0,))
+    huge = node_stats(load, info=ArrayInfo(shape=(4096, 4096), dtype="f32"))
+    assert huge.bytes_read == TILE_ELEMS * 4  # one tile per instance
+
+
+def test_symbolic_dim_prices_full_tile():
+    load = ENode("load", (0,))
+    sym = node_stats(load, info=ArrayInfo(shape=(None,), dtype="f32"))
+    assert sym.bytes_read == TILE_ELEMS * 4
+
+
+def test_array_info_index():
+    info = ArrayInfo(shape=(3, 3, None), dtype="f32")
+    assert info.index(2).shape == (None,)
+    assert info.index(3).shape == ()
+    assert info.index(3).elems() == 1
+    assert info.index(0) is info
+
+
+def test_store_stats_infos_and_dtype():
+    full = store_stats(2)
+    assert full.bytes_written == 2 * TILE_ELEMS * 4
+    half = store_stats(2, dtype_bytes=2)
+    assert half.bytes_written == full.bytes_written / 2
+    mixed = store_stats(0, infos=[ArrayInfo(shape=(1, 128), dtype="f32"),
+                                  None,
+                                  ArrayInfo(shape=(8, 128), dtype="bf16")])
+    assert mixed.bytes_written == 128 * 4 + TILE_ELEMS * 4 + TILE_ELEMS * 2
+
+
+# -- uniform vs varying index semantics ---------------------------------------------
+def _norm_program(dtype="f32"):
+    p = KernelProgram("t", dtype=dtype)
+    x = p.array_in("x", shape=(8, 128))
+    g = p.array_in("g", shape=(1, 128))
+    p.array_out("o", shape=(8, 128))
+    p.store("o", x.load() * g.load())
+    return p
+
+
+def test_egraph_operand_info_uniform_vs_varying():
+    p = KernelProgram("t")
+    f = p.array_in("f", shape=(9, None))
+    p.scalar("i")
+    p.array_out("o", shape=(None,))
+    p.store("o", f[c(0), v("i")], v("i"))
+    ssa = build_ssa(p)
+    eg = ssa.egraph
+    info = ssa.array_info["f"]
+    const_idx = eg.add(ENode("const", (), 0))
+    var_idx = eg.add(ENode("var", (), "i"))
+    # constant index selects a slice; varying index gathers per lane
+    assert eg.operand_info(info, (const_idx,)).shape == (None,)
+    varying = eg.operand_info(info, (const_idx, var_idx))
+    assert varying.shape is None and varying.dtype == "f32"
+    # a fully-indexed load with a varying lane index prices a full tile
+    assert ssa.store_infos()[0].shape is None
+
+
+def test_bound_cost_model_prices_declared_rows():
+    ssa = build_ssa(_norm_program())
+    eg = ssa.egraph
+    cm = RooflineCostModel(egraph=eg)
+    loads = [n for n in eg.hashcons if n.op == "load"]
+    by_bytes = sorted(cm.node_stats(eg.canonicalize(n)).bytes_read
+                      for n in loads)
+    assert by_bytes == [128 * 4, TILE_ELEMS * 4]  # g row + x tile
+
+
+def test_set_array_info_rederives_existing_classes():
+    """Re-registering an array with corrected (shape, dtype) overwrites
+    the stale analysis on already-added symbol/load classes."""
+    ssa = build_ssa(_norm_program())
+    eg = ssa.egraph
+    eg.set_array_info("x", ArrayInfo(shape=(8, 128), dtype="bf16"))
+    cm = RooflineCostModel(egraph=eg)
+    loads = [eg.canonicalize(n) for n in eg.hashcons if n.op == "load"]
+    by_bytes = sorted(cm.node_stats(n).bytes_read for n in loads)
+    assert by_bytes == [128 * 4, TILE_ELEMS * 2]  # g row + bf16 x tile
+
+
+def test_rebind_after_redeclaration_clears_stale_prices():
+    """A bound model re-bound to the same graph after a re-declaration
+    must drop its cached load prices (extract_dag rebinds per call)."""
+    ssa = build_ssa(_norm_program())
+    eg = ssa.egraph
+    cm = RooflineCostModel(egraph=eg)
+    load_x = next(eg.canonicalize(n) for n in eg.hashcons
+                  if n.op == "load" and
+                  eg.classes[eg.find(n.children[0])].ainfo.shape == (8, 128))
+    assert cm.node_stats(load_x).bytes_read == TILE_ELEMS * 4
+    eg.set_array_info("x", ArrayInfo(shape=(8, 128), dtype="bf16"))
+    cm.bind_egraph(eg)
+    assert cm.node_stats(load_x).bytes_read == TILE_ELEMS * 2
+
+
+def test_unbound_model_keeps_full_tile_pricing():
+    cm = RooflineCostModel()
+    st = cm.node_stats(ENode("load", (0,)))
+    assert st.bytes_read == TILE_ELEMS * 4
+
+
+# -- kernel dtype threading through the pipeline ------------------------------------
+def test_pipeline_dtype_halves_predicted_bytes():
+    cfg = SaturatorConfig(mode="accsat")
+    sk32 = saturate_program(_norm_program("f32"), cfg)
+    sk16 = saturate_program(_norm_program("bf16"), cfg)
+    b32 = sk32.extraction.predicted
+    b16 = sk16.extraction.predicted
+    total32 = b32["bytes_read"] + b32["bytes_written"]
+    total16 = b16["bytes_read"] + b16["bytes_written"]
+    assert total16 == pytest.approx(total32 / 2)
+    assert b16["latency_ns"] <= b32["latency_ns"]
+
+
+def test_pipeline_row_declaration_lowers_prediction():
+    """The ROADMAP 'broadcast rows' item: declaring the gain as a row
+    strictly lowers predicted HBM traffic vs an undeclared twin."""
+    undeclared = KernelProgram("t")
+    x = undeclared.array_in("x")
+    g = undeclared.array_in("g")
+    undeclared.array_out("o")
+    undeclared.store("o", x.load() * g.load())
+    cfg = SaturatorConfig(mode="accsat")
+    sk_row = saturate_program(_norm_program(), cfg)
+    sk_flat = saturate_program(undeclared, cfg)
+    row_bytes = sk_row.extraction.predicted["bytes_read"]
+    flat_bytes = sk_flat.extraction.predicted["bytes_read"]
+    assert row_bytes == flat_bytes - (TILE_ELEMS - 128) * 4
+
+
+# -- LatencyModel dtype-selected MXU peak -------------------------------------------
+def test_mxu_peak_scales_with_dtype():
+    from repro.analysis import OpStats
+    st = OpStats(mxu_flops=1e12)
+    legacy = LatencyModel(DEFAULT_CHIP)
+    f32 = LatencyModel(DEFAULT_CHIP, mxu_dtype="f32")
+    bf16 = LatencyModel(DEFAULT_CHIP, mxu_dtype="bf16")
+    f8 = LatencyModel(DEFAULT_CHIP, mxu_dtype="f8")
+    assert legacy.compute_ns(st) == pytest.approx(bf16.compute_ns(st))
+    assert f32.compute_ns(st) == pytest.approx(2 * bf16.compute_ns(st))
+    assert f8.compute_ns(st) == pytest.approx(bf16.compute_ns(st) / 2)
+
+
+def test_choice_stats_store_infos():
+    eg = EGraph()
+    root = add_expr(eg, ("mul", ("var", "a"), ("var", "b")))
+    from repro.core import extract_dag
+    res = extract_dag(eg, root)
+    rep_full = eg.choice_stats(res.choice, root, n_stores=1)
+    rep_row = eg.choice_stats(
+        res.choice, root, n_stores=1,
+        store_infos=[ArrayInfo(shape=(1, 128), dtype="f32")])
+    assert rep_full["bytes_written"] == TILE_ELEMS * 4
+    assert rep_row["bytes_written"] == 128 * 4
