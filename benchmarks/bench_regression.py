@@ -1,4 +1,4 @@
-"""Benchmark-regression gate for CI (PR 3 satellite).
+"""Benchmark-regression gate for CI (PR 3 satellite, PR 4 calibration).
 
 Runs the saturator over the full kernel suite (NPB/SPEC-style kernels +
 model tile programs), extracts every kernel with both the beam search and
@@ -12,21 +12,36 @@ The build fails when any kernel:
   cost vs the baseline, or
 * extracts *worse* with the beam than with the hill climb (the beam is
   seeded with the hill climb's restarts, so this indicates a search
-  regression, not noise).
+  regression, not noise);
+
+or when the committed device profiles (``experiments/device_profiles/``,
+the calibrated predicted-vs-measured loop) stop holding their bar:
+
+* no committed profile exists at all,
+* a profile's calibrated Spearman rank correlation — recomputed from its
+  stored measurements with the *current* model code — falls below the
+  0.8 floor or below the value stored at fit time, or
+* its calibrated MAPE stops beating the uncalibrated defaults.
 
 Predicted metrics are model-computed (chip constants) and every search
 pass stops on a deterministic evaluation budget (`beam_expansions`,
 `hillclimb_evals`) rather than the wall clock, with generous time
 ceilings as pure safety nets (``saturation_stats.GATE_CONFIG``) — so
 the gate is exact on any runner regardless of machine speed or load,
-unlike wall-clock benchmarks. The hill-climb comparison re-extracts the
-*same* saturated e-graph, so beam <= hillclimb holds structurally
-within one run. The script re-execs itself with ``PYTHONHASHSEED=0`` —
-e-node sets iterate in hash order, so rule-match ordering (and with it
-plateau tie-breaks in extraction) would otherwise drift per process.
-Kernels new since the baseline are reported but do not fail the gate;
-refresh the baseline with ``--update`` after intentional cost-model or
-extraction changes and commit the diff.
+unlike wall-clock benchmarks. The calibration checks are equally exact:
+they re-score committed measurements, they do not re-time anything. The
+hill-climb comparison re-extracts the *same* saturated e-graph, so
+beam <= hillclimb holds structurally within one run. The script re-execs
+itself with ``PYTHONHASHSEED=0`` — e-node sets iterate in hash order, so
+rule-match ordering (and with it plateau tie-breaks in extraction) would
+otherwise drift per process. Kernels new since the baseline are reported
+but do not fail the gate; refresh the baseline with ``--update`` after
+intentional cost-model or extraction changes and commit the diff.
+
+All regenerated artifacts live under gitignored ``experiments/out/``;
+only the baseline, the device profiles, and the latency table are
+committed. The baseline is schema-versioned: a version mismatch fails
+loudly instead of silently comparing incompatible numbers.
 
 Usage:
     python benchmarks/bench_regression.py            # check vs baseline
@@ -38,24 +53,25 @@ import json
 import pathlib
 import sys
 
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
-from hashseed import reexec_with_fixed_hashseed  # noqa: E402
+if __package__ in (None, ""):        # direct script invocation
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.bootstrap import OUT_ROOT, ROOT  # noqa: E402
+from benchmarks.hashseed import reexec_with_fixed_hashseed  # noqa: E402
 
 reexec_with_fixed_hashseed()
 
-ROOT = pathlib.Path(__file__).resolve().parents[1]
 BASELINE = ROOT / "experiments" / "bench_baseline.json"
-CURRENT = ROOT / "experiments" / "bench_current.json"
-BEAM_STATS = ROOT / "experiments" / "beam_stats.json"
+PROFILE_DIR = ROOT / "experiments" / "device_profiles"
+CURRENT = OUT_ROOT / "bench_current.json"
+BEAM_STATS = OUT_ROOT / "beam_stats.json"
 
+BASELINE_SCHEMA_VERSION = 2   # 1 = bare {kernel: metrics} map (PR 3)
 TOLERANCE_PCT = 2.0
 ABS_EPS = 1e-6          # ignore float dust on tiny costs
 BEAM_EPS = 1e-6
 
 
 def collect():
-    sys.path.insert(0, str(ROOT / "src"))
-    sys.path.insert(0, str(ROOT))
     from benchmarks.saturation_stats import run_saturation_stats
     res = run_saturation_stats(compare_hillclimb=True)
     metrics = {}
@@ -69,6 +85,26 @@ def collect():
             "oracle_gap": r["oracle_gap"],
         }
     return res, metrics
+
+
+def load_baseline() -> dict:
+    """Parse the committed baseline, failing loudly on schema drift."""
+    try:
+        doc = json.loads(BASELINE.read_text())
+    except json.JSONDecodeError as e:
+        print(f"ERROR: baseline {BASELINE} is not valid JSON: {e}",
+              file=sys.stderr)
+        raise SystemExit(2)
+    ver = doc.get("schema_version") if isinstance(doc, dict) else None
+    if ver != BASELINE_SCHEMA_VERSION:
+        print(
+            f"ERROR: baseline {BASELINE} has schema_version {ver!r}, this "
+            f"gate expects {BASELINE_SCHEMA_VERSION}. A silent comparison "
+            "of incompatible schemas hides real regressions — regenerate "
+            "with `python benchmarks/bench_regression.py --update` and "
+            "commit the diff.", file=sys.stderr)
+        raise SystemExit(2)
+    return doc["kernels"]
 
 
 def check(metrics, baseline) -> list:
@@ -104,6 +140,36 @@ def check(metrics, baseline) -> list:
     return failures
 
 
+def check_calibration() -> list:
+    """The predicted-vs-measured leg of the gate: every committed device
+    profile must still rank kernels faithfully under the current model
+    code (Spearman >= floor, >= its committed baseline, MAPE better than
+    uncalibrated). Deterministic — re-scores stored measurements only."""
+    from repro.analysis import check_profile, load_profile
+    paths = sorted(PROFILE_DIR.glob("*.json"))
+    if not paths:
+        return [f"no committed device profiles under {PROFILE_DIR}; the "
+                "calibrated predicted-vs-measured loop is unverified "
+                "(fit one with `python benchmarks/measure.py --fit`)"]
+    failures = []
+    for p in paths:
+        try:
+            prof = load_profile(p)
+        except Exception as e:
+            failures.append(f"{p.name}: unloadable profile: {e}")
+            continue
+        fails = check_profile(prof)
+        failures.extend(fails)
+        f = prof.fit
+        status = "FAIL" if fails else "ok"
+        print(f"  profile {prof.name:24s} [{status}] "
+              f"spearman {f.get('spearman', float('nan')):.3f} "
+              f"(uncal {f.get('uncalibrated_spearman', float('nan')):.3f})  "
+              f"MAPE {f.get('mape_pct', float('nan')):.1f}% "
+              f"(uncal {f.get('uncalibrated_mape_pct', float('nan')):.1f}%)")
+    return failures
+
+
 def main() -> int:
     update = "--update" in sys.argv
     res, metrics = collect()
@@ -119,13 +185,15 @@ def main() -> int:
     BEAM_STATS.write_text(json.dumps(beam_rows, indent=2) + "\n")
     print(f"wrote {CURRENT} and {BEAM_STATS} ({len(metrics)} kernels)")
 
-    # refresh the latency table from the same run (artifact-uploaded by CI)
+    # refresh the latency table from the same run (artifact-uploaded by
+    # CI) — includes the predicted-vs-measured calibration section
     from benchmarks.roofline_table import kernel_table
     kernel_table(res)
 
     if update:
-        BASELINE.write_text(json.dumps(metrics, indent=2, sort_keys=True)
-                            + "\n")
+        BASELINE.write_text(json.dumps(
+            {"schema_version": BASELINE_SCHEMA_VERSION, "kernels": metrics},
+            indent=2, sort_keys=True) + "\n")
         print(f"baseline updated: {BASELINE}")
         return 0
 
@@ -133,7 +201,7 @@ def main() -> int:
         print(f"ERROR: no baseline at {BASELINE}; "
               "run with --update and commit it", file=sys.stderr)
         return 2
-    baseline = json.loads(BASELINE.read_text())
+    baseline = load_baseline()
     failures = check(metrics, baseline)
     for kernel, cur in sorted(metrics.items()):
         base = baseline.get(kernel, {})
@@ -141,6 +209,8 @@ def main() -> int:
         print(f"  {kernel:24s} lat {cur['predicted_latency_ns']:10.2f} ns"
               f" (base {b if b is None else format(b, '10.2f')})"
               f"  beamΔ {cur['beam_vs_hillclimb_pct']:+.2f}%")
+    print("calibrated predicted-vs-measured check:")
+    failures += check_calibration()
     if failures:
         print(f"\nFAIL: {len(failures)} regression(s) "
               f"(tolerance {TOLERANCE_PCT}%):", file=sys.stderr)
@@ -148,7 +218,8 @@ def main() -> int:
             print(f"  {f}", file=sys.stderr)
         return 1
     print(f"\nOK: {len(metrics)} kernels within {TOLERANCE_PCT}% of "
-          "baseline; beam never worse than hill climb")
+          "baseline; beam never worse than hill climb; calibrated "
+          "profiles rank >= 0.8 Spearman and beat uncalibrated MAPE")
     return 0
 
 

@@ -1,0 +1,56 @@
+"""Shared sys.path / dependency bootstrap for the benchmark drivers.
+
+Every script in ``benchmarks/`` must work both ways:
+
+    python -m benchmarks.run          # package invocation, from repo root
+    python benchmarks/run.py          # direct script invocation, anywhere
+
+Direct invocation puts only ``benchmarks/`` on ``sys.path`` — neither the
+repo root (for ``import benchmarks``) nor ``src/`` (for ``import repro``)
+is importable, and any relative import dies with
+"attempted relative import with no known parent package".
+:func:`ensure_repo_imports` fixes both path entries idempotently, and
+:func:`die_with_import_help` turns the remaining ImportErrors (missing
+third-party deps) into actionable guidance instead of a traceback.
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+# Single gitignored home for every generated benchmark artifact
+# (measurements, bench JSONs, regression-gate outputs). Only
+# experiments/bench_baseline.json and experiments/device_profiles/ are
+# committed.
+OUT_ROOT = ROOT / "experiments" / "out"
+
+_HELP = """\
+ERROR: {exc}
+
+The benchmark drivers need the repo root and src/ importable plus the
+runtime deps. Checklist:
+  * run from the repo root:    python -m benchmarks.run
+    (direct script invocation  python benchmarks/run.py  also works —
+    the driver bootstraps sys.path itself)
+  * the saturator package lives in src/; this bootstrap inserts
+    {root}/src automatically, so a failing `import repro`
+    means the checkout is incomplete
+  * third-party deps: pip install "jax[cpu]" numpy
+"""
+
+
+def ensure_repo_imports() -> None:
+    """Make ``import benchmarks`` and ``import repro`` resolvable from any
+    invocation style (idempotent)."""
+    for p in (str(ROOT), str(ROOT / "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+
+
+def die_with_import_help(exc: ImportError) -> "NoReturn":  # noqa: F821
+    print(_HELP.format(exc=exc, root=ROOT), file=sys.stderr)
+    raise SystemExit(2)
+
+
+ensure_repo_imports()

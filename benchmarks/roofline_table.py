@@ -75,11 +75,61 @@ def main():
     print(f"wrote {OUT} ({len(cells)} cells)")
 
 
+def calibration_lines():
+    """Predicted-vs-measured section from the committed device profiles
+    (deterministic: renders each profile's stored fit evidence, so the
+    committed table never drifts with runner speed)."""
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.analysis import SPEARMAN_FLOOR, load_profile
+    paths = sorted((ROOT / "experiments" / "device_profiles").glob("*.json"))
+    lines = [
+        "",
+        "## Predicted vs measured (calibrated device profiles)",
+        "",
+        "Per committed profile under `experiments/device_profiles/`: the",
+        "measured per-instance times it was fitted on",
+        "(`benchmarks/measure.py`, warmup + median-of-k, `measured_kind`",
+        "flagged), the uncalibrated analytic prediction, and the",
+        "calibrated prediction. MAPE and Spearman rank correlation are",
+        f"gated in CI: calibrated Spearman >= {SPEARMAN_FLOOR} and >= the",
+        "fit-time value, calibrated MAPE strictly below uncalibrated.",
+        "Re-fit with `python benchmarks/measure.py --fit` on new hardware.",
+    ]
+    if not paths:
+        lines += ["", "*(no committed device profiles)*"]
+        return lines
+    for p in paths:
+        prof = load_profile(p)
+        f = prof.fit
+        lines += [
+            "",
+            f"### `{prof.name}` — {prof.chip}, `{prof.measured_kind}`"
+            f" ({len(f.get('kernels', []))} kernels)",
+            "",
+            f"MAPE **{f['mape_pct']:.1f}%** (uncalibrated "
+            f"{f['uncalibrated_mape_pct']:.1f}%) · Spearman "
+            f"**{f['spearman']:.3f}** (uncalibrated "
+            f"{f['uncalibrated_spearman']:.3f})",
+            "",
+            "| kernel | measured_ns | uncal_pred_ns | cal_pred_ns | err% |",
+            "|---|---|---|---|---|",
+        ]
+        for r in f.get("kernels", []):
+            err = 100.0 * (r["predicted_ns"] - r["measured_ns"]) \
+                / r["measured_ns"]
+            lines.append(
+                f"| {r['kernel']} | {r['measured_ns']:.0f} | "
+                f"{r['uncalibrated_ns']:.1f} | {r['predicted_ns']:.0f} | "
+                f"{err:+.1f} |")
+    return lines
+
+
 def kernel_table(res=None):
     """Per-kernel roofline predictions from the unified analysis engine
     (no dry-run artifacts needed): extracted-term FLOPs, HBM bytes, and
     predicted latency under the default chip's compute/memory roofs,
-    plus the beam-vs-hillclimb extraction delta. Pass precomputed
+    plus the beam-vs-hillclimb extraction delta and the calibrated
+    predicted-vs-measured section. Pass precomputed
     ``run_saturation_stats()`` results to avoid re-running the suite
     (``bench_regression.py`` does)."""
     sys.path.insert(0, str(ROOT / "src"))
@@ -96,8 +146,8 @@ def kernel_table(res=None):
         "predicted-latency delta vs the PR-2 multi-start hill climb; the",
         "structural beam <= hillclimb guarantee is on the store-free DAG",
         "objective (gated in CI), so a negative delta marks a strictly",
-        "better selection. Compare against measured step times from",
-        "benchmarks/run.py to track predicted vs measured throughput.",
+        "better selection. The calibration section below tracks these",
+        "predictions against measured times (benchmarks/measure.py).",
         "",
         "| kernel | flops | bytes | latency_ns | bound | beam Δ% |",
         "|---|---|---|---|---|---|",
@@ -109,6 +159,7 @@ def kernel_table(res=None):
             f"{r['predicted_bytes']:.0f} | "
             f"{r['predicted_latency_ns']:.2f} | {r['predicted_bound']} | "
             f"{'' if delta is None else format(delta, '+.2f')} |")
+    lines += calibration_lines()
     KOUT.parent.mkdir(parents=True, exist_ok=True)
     KOUT.write_text("\n".join(lines) + "\n")
     print(f"wrote {KOUT} ({len(res['rows'])} kernels)")

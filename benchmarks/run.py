@@ -1,28 +1,42 @@
 """Benchmark driver — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows and writes full JSON to
-experiments/bench/. Tables:
+experiments/out/bench/ (gitignored — benchmark outputs never get
+committed by accident). Tables:
   ablation          — Fig. 2 / Fig. 4 (CSE / CSE+SAT / CSE+BULK / ACCSAT)
   breakdown         — Table IV (per-kernel instruction/load/FMA deltas)
   saturation_stats  — §VII pipeline timing statistics
   rule_ablation     — §V-A validation (restricted vs extended rule sets)
+  measure           — measured per-instance kernel times (the calibration
+                      harness, benchmarks/measure.py) vs the roofline
+                      model's predictions
   lm_step           — framework train/decode step per architecture
 (The Tables II/III inventory — suite × sizes — is the kernel_suite itself;
 the dry-run roofline table lives in experiments/dryrun/.)
+
+Runs as ``python -m benchmarks.run`` or ``python benchmarks/run.py``.
 """
 import json
 import pathlib
 import sys
 
-OUT = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "bench"
+if __package__ in (None, ""):        # direct script invocation
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.bootstrap import OUT_ROOT, die_with_import_help
+
+OUT = OUT_ROOT / "bench"
 
 
 def main() -> None:
     OUT.mkdir(parents=True, exist_ok=True)
-    from .ablation import run_ablation
-    from .breakdown import run_breakdown
-    from .saturation_stats import run_saturation_stats
-    from .lm_step import run_lm_step
+    try:
+        from benchmarks.ablation import run_ablation
+        from benchmarks.breakdown import run_breakdown
+        from benchmarks.saturation_stats import run_saturation_stats
+        from benchmarks.lm_step import run_lm_step
+        from benchmarks.measure import measure_all
+    except ImportError as e:
+        die_with_import_help(e)
 
     print("name,us_per_call,derived")
 
@@ -43,7 +57,7 @@ def main() -> None:
               f"fma={row['fma_formed']};"
               f"tpu_cost_red={row['tpu_cost_reduction_pct']:.1f}%")
 
-    from .rule_ablation import run_rule_ablation
+    from benchmarks.rule_ablation import run_rule_ablation
     ra = run_rule_ablation()
     (OUT / "rule_ablation.json").write_text(json.dumps(ra, indent=1))
     for row in ra:
@@ -64,6 +78,13 @@ def main() -> None:
           f"{sat['saturation_s_mean']*1e6:.1f},"
           f"mean_s={sat['saturation_s_mean']:.4f};"
           f"stdev={sat['saturation_s_stdev']:.4f};paper_mean_s=0.63")
+
+    mea = measure_all()
+    (OUT / "measure.json").write_text(json.dumps(mea, indent=1))
+    for row in mea["rows"]:
+        print(f"measure/{row['kernel']},{row['measured_ns']/1e3:.3f},"
+              f"kind={row['measured_kind']};"
+              f"predicted_ns={row['predicted_ns']:.1f}")
 
     lm = run_lm_step()
     (OUT / "lm_step.json").write_text(json.dumps(lm, indent=1))

@@ -12,6 +12,11 @@ from .opstats import (DTYPE_BYTES, TILE_ELEMS, TILE_SHAPE, ArrayInfo,
 from .latency import LatencyModel
 from .cost_model import RooflineCostModel
 from .hlo import latency_from_hlo, stats_from_hlo, stats_from_report
+from .calibrate import (DEFAULT_PARAMS, SPEARMAN_FLOOR, CalibrationError,
+                        CalibrationParams, DeviceProfile, KernelFeatures,
+                        check_profile, evaluate_params, fit_params,
+                        fit_profile, kernel_features, load_profile, mape_pct,
+                        predict_ns, spearman)
 
 __all__ = [
     "OpStats", "node_stats", "op_pass_class", "store_stats",
@@ -19,4 +24,9 @@ __all__ = [
     "ArrayInfo", "dtype_byte_width",
     "LatencyModel", "RooflineCostModel",
     "latency_from_hlo", "stats_from_hlo", "stats_from_report",
+    "DEFAULT_PARAMS", "SPEARMAN_FLOOR",
+    "CalibrationError", "CalibrationParams", "DeviceProfile",
+    "KernelFeatures", "check_profile", "evaluate_params", "fit_params",
+    "fit_profile", "kernel_features", "load_profile", "mape_pct",
+    "predict_ns", "spearman",
 ]

@@ -19,16 +19,25 @@ analysis, so a broadcast scalar is priced at one element, a row at one
 row, and bf16/f8 arrays at half/quarter f32 HBM bytes. Unbound models
 keep the full-f32-tile pricing.
 
+Models may additionally be *calibrated*: constructing with
+``profile=<DeviceProfile | name | path>`` (see
+:mod:`repro.analysis.calibrate`) swaps in a measured
+:class:`LatencyModel` — fitted per-bound overlap slack, HBM efficiency,
+launch overhead — and scales every node's VPU passes by its op-class's
+fitted coefficient, so beam/hill-climb extraction minimizes the
+calibrated objective rather than the analytic guess.
+
 Duck-typed against :class:`repro.core.cost.CostModel` (same ``node_cost``
 signature) so every existing call site keeps working.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import TYPE_CHECKING, Dict, Iterable, Optional
 
 from .latency import LatencyModel, _default_chip
 from .opstats import (TILE_ELEMS, ArrayInfo, OpStats, dtype_byte_width,
-                      node_stats)
+                      node_stats, op_pass_class)
 
 if TYPE_CHECKING:
     from repro.core.egraph import EGraph
@@ -46,6 +55,7 @@ class RooflineCostModel:
                  dtype: Optional[str] = None,
                  dtype_bytes: Optional[int] = None,
                  latency: Optional[LatencyModel] = None,
+                 profile=None,
                  egraph: Optional["EGraph"] = None):
         self.chip = chip if chip is not None else _default_chip()
         self.tile_elems = tile_elems
@@ -55,10 +65,26 @@ class RooflineCostModel:
         # the MXU roof scales with the kernel's operand width (only
         # matters for terms carrying mxu_flops, i.e. the HLO bridge —
         # e-graph tile terms are pure VPU); an explicit `latency`
-        # override keeps whatever the caller configured
-        self.latency = latency or LatencyModel(self.chip,
-                                               tile_elems=tile_elems,
-                                               mxu_dtype=self.dtype)
+        # override keeps whatever the caller configured, and a device
+        # profile swaps in the calibrated model fitted to measured times
+        if latency is not None:
+            self.latency = latency
+        elif profile is not None:
+            self.latency = LatencyModel.from_profile(
+                profile, chip=chip, mxu_dtype=self.dtype)
+            # one tile size / chip for both axes: node pricing
+            # (bytes/flops) must use the same tile_elems the calibrated
+            # compute roof uses, and chip=None resolves to the
+            # profile's fitted model_chip — or the objective mixes units
+            self.tile_elems = self.latency.tile_elems
+            self.chip = self.latency.chip
+        else:
+            self.latency = LatencyModel(self.chip, tile_elems=tile_elems,
+                                        mxu_dtype=self.dtype)
+        # fitted per-op-class VPU pass multipliers (calibration); applied
+        # at node-pricing time so every aggregate downstream — beam
+        # Evaluator fast path included — sees coefficient-weighted passes
+        self._pass_coeffs = dict(self.latency.pass_coeffs or {})
         self._node_cache: Dict["ENode", OpStats] = {}
         self._eg: Optional["EGraph"] = None
         self._eg_version: Optional[int] = None
@@ -101,6 +127,18 @@ class RooflineCostModel:
             else:
                 st = node_stats(node, tile_elems=self.tile_elems,
                                 dtype_bytes=self.dtype_bytes)
+            if self._pass_coeffs:
+                if st.vpu_passes:
+                    k = self._pass_coeffs.get(op_pass_class(node.op), 1.0)
+                    if k != 1.0:
+                        st = dataclasses.replace(
+                            st, vpu_passes=st.vpu_passes * k)
+                elif node.op == "load":
+                    # calibrated per-load dispatch cost (serial issue
+                    # slot, not bandwidth) — 0 in the analytic model
+                    k = self._pass_coeffs.get("memory_dispatch", 0.0)
+                    if k:
+                        st = dataclasses.replace(st, vpu_passes=k)
             self._node_cache[node] = st
         return st
 

@@ -4,8 +4,8 @@ Classic roofline with three ceilings derived from the
 :class:`repro.core.hardware.ChipSpec` peaks:
 
   compute  = VPU passes × tile cycles / clock  +  MXU FLOPs / peak
-  memory   = HBM bytes / HBM bandwidth
-  latency  = max(compute, memory) + slack × min(compute, memory)
+  memory   = HBM bytes / (HBM bandwidth × efficiency)
+  latency  = base + max(compute, memory) + slack × min(compute, memory)
 
 The ``overlap_slack`` term models imperfect compute/memory overlap (DMA
 issue, semaphore waits). It is deliberately small — the roofline maximum
@@ -14,11 +14,22 @@ axes, so extraction always prefers "less computation, less memory access"
 even for terms pinned against one roof (the paper's §V-B motivation:
 ties under a flat weight table are exactly where extraction quality is
 lost).
+
+The model is *calibratable*: :meth:`LatencyModel.from_profile` loads a
+fitted :class:`repro.analysis.calibrate.DeviceProfile` whose measured
+parameters replace the analytic guesses — per-bound overlap slack
+(compute-bound and memory-bound kernels hide traffic differently), an
+HBM-efficiency factor (achieved vs peak bandwidth), a constant
+per-instance launch overhead ``base_ns``, and per-op-class VPU pass
+coefficients (``pass_coeffs``, applied at node-pricing time by
+:class:`repro.analysis.cost_model.RooflineCostModel` so the aggregate
+``vpu_passes`` arriving here is already coefficient-weighted). With the
+default values the formula reduces exactly to the uncalibrated model.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Dict, Optional
+from typing import TYPE_CHECKING, Dict, Mapping, Optional
 
 from .opstats import OpStats, TILE_ELEMS, dtype_byte_width
 
@@ -42,10 +53,62 @@ class LatencyModel:
     # at half the bf16 rate, 8-bit at double it). None keeps the legacy
     # bf16-peak pricing for callers that never declared a dtype.
     mxu_dtype: Optional[str] = None
+    # -- calibrated parameters (defaults == the analytic model) ------------
+    # Per-bound overlap slack: measured kernels hide the minor axis
+    # differently depending on which roof binds; ``None`` falls back to
+    # the shared ``overlap_slack``.
+    overlap_slack_compute: Optional[float] = None
+    overlap_slack_memory: Optional[float] = None
+    # Achieved/peak HBM bandwidth ratio (memory roof divisor).
+    hbm_efficiency: float = 1.0
+    # Constant per-instance overhead (kernel launch / interpret dispatch).
+    base_ns: float = 0.0
+    # Per-op-class VPU pass multipliers fitted by calibration. NOT applied
+    # here (OpStats only carries aggregate passes) — RooflineCostModel
+    # scales each node's passes by its class coefficient at pricing time.
+    pass_coeffs: Optional[Mapping[str, float]] = None
+    # Name of the device profile these parameters came from (reporting).
+    profile_name: Optional[str] = None
 
     def __post_init__(self):
         if self.chip is None:
             object.__setattr__(self, "chip", _default_chip())
+
+    @classmethod
+    def from_profile(cls, profile, *, chip: Optional["ChipSpec"] = None,
+                     mxu_dtype: Optional[str] = None) -> "LatencyModel":
+        """Calibrated model from a :class:`DeviceProfile` (or a path /
+        bare profile name resolved via ``calibrate.load_profile``).
+
+        ``chip=None`` resolves the profile's stored ``model_chip`` — the
+        ChipSpec its coefficients were fitted against — so a profile
+        fitted on non-default constants is never silently re-priced with
+        the default ones.
+        """
+        from .calibrate import chip_by_name, load_profile  # deferred cycle
+        prof = load_profile(profile)
+        if chip is None:
+            chip = chip_by_name(prof.model_chip)
+        p = prof.params
+        return cls(chip=chip, tile_elems=prof.tile_elems,
+                   overlap_slack=p.overlap_slack_compute,
+                   overlap_slack_compute=p.overlap_slack_compute,
+                   overlap_slack_memory=p.overlap_slack_memory,
+                   hbm_efficiency=p.hbm_efficiency, base_ns=p.base_ns,
+                   pass_coeffs=dict(p.vpu_pass_coeffs),
+                   mxu_dtype=mxu_dtype, profile_name=prof.name)
+
+    @property
+    def slack_compute(self) -> float:
+        """Overlap slack applied when the compute roof binds."""
+        s = self.overlap_slack_compute
+        return self.overlap_slack if s is None else s
+
+    @property
+    def slack_memory(self) -> float:
+        """Overlap slack applied when the memory roof binds."""
+        s = self.overlap_slack_memory
+        return self.overlap_slack if s is None else s
 
     def mxu_peak_flops(self) -> float:
         peak = self.chip.peak_flops_bf16
@@ -64,12 +127,14 @@ class LatencyModel:
         return (vpu_s + mxu_s) * 1e9
 
     def memory_ns(self, stats: OpStats) -> float:
-        return stats.total_bytes / self.chip.hbm_bw * 1e9
+        return stats.total_bytes / (self.chip.hbm_bw
+                                    * self.hbm_efficiency) * 1e9
 
     def latency_ns(self, stats: OpStats) -> float:
         c = self.compute_ns(stats)
         m = self.memory_ns(stats)
-        return max(c, m) + self.overlap_slack * min(c, m)
+        slack = self.slack_compute if c >= m else self.slack_memory
+        return self.base_ns + max(c, m) + slack * min(c, m)
 
     def bound(self, stats: OpStats) -> str:
         return "compute" if self.compute_ns(stats) >= self.memory_ns(stats) \
@@ -96,4 +161,5 @@ class LatencyModel:
             "bound": self.bound(stats),
             "arithmetic_intensity": self.arithmetic_intensity(stats),
             "n_ops": stats.n_ops,
+            "profile": self.profile_name,
         }

@@ -76,8 +76,16 @@ class Evaluator:
             self._tile = float(lat.tile_elems)
             self._vpu = float(lat.chip.vpu_elems_per_s)
             self._mxu_peak = float(lat.mxu_peak_flops())
-            self._hbm = float(lat.chip.hbm_bw)
-            self._slack = float(lat.overlap_slack)
+            # calibrated models (LatencyModel.from_profile) carry an HBM
+            # efficiency factor, per-bound overlap slack, and a constant
+            # launch overhead; the defaults reduce to the analytic model
+            self._hbm = (float(lat.chip.hbm_bw)
+                         * float(getattr(lat, "hbm_efficiency", 1.0)))
+            self._slack_c = float(getattr(lat, "slack_compute",
+                                          lat.overlap_slack))
+            self._slack_m = float(getattr(lat, "slack_memory",
+                                          lat.overlap_slack))
+            self._base = float(getattr(lat, "base_ns", 0.0))
             self._stats: Dict[ENode, Tuple[float, float, float]] = {}
         else:
             self._weights: Dict[ENode, float] = {}
@@ -166,8 +174,8 @@ class Evaluator:
                    + mxu / self._mxu_peak) * 1e9
         memory = nbytes / self._hbm * 1e9
         if compute >= memory:
-            return compute + self._slack * memory
-        return memory + self._slack * compute
+            return self._base + compute + self._slack_c * memory
+        return self._base + memory + self._slack_m * compute
 
 
 class EvalBudget:

@@ -158,6 +158,10 @@ class TileOp:
     jax_ref: Callable          # pure-jnp oracle built from the same program
     row_block: int
     source: str
+    # full pipeline result the kernel was generated from — the timing/
+    # calibration harness (benchmarks/measure.py) extracts its feature
+    # vector from this exact extraction choice
+    sk: Optional[Any] = None
 
     def __call__(self, *arrays, interpret: Optional[bool] = None, **scalars):
         return self.apply(*arrays, interpret=interpret, **scalars)
@@ -270,4 +274,4 @@ def make_tile_op(prog: KernelProgram,
     n_tiles = len(pk.in_arrays) + len(pk.out_arrays) + 2
     rb = row_block or pick_row_block(256, n_tiles)
     return TileOp(name=prog.name, pk=pk, jax_ref=jax_ref, row_block=rb,
-                  source=pk.source)
+                  source=pk.source, sk=sk)

@@ -59,6 +59,12 @@ class SaturatorConfig:
     beam_width: int = 8
     beam_expansions: int = 10_000
     hillclimb_evals: int = 100_000
+    # Calibrated objective: a DeviceProfile instance, a path, or a bare
+    # profile name under experiments/device_profiles/ (see
+    # repro.analysis.calibrate). None keeps the analytic roofline
+    # constants — the default, so committed baselines stay in analytic
+    # units. Only meaningful with cost_model="roofline".
+    device_profile: Optional[Any] = None
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -95,9 +101,11 @@ class SaturatorConfig:
         if self.cost_model == "roofline":
             # thread the kernel's declared dtype through the roofline
             # objective (per-array shapes/dtypes resolve later, when
-            # extract_dag binds the model to the e-graph)
+            # extract_dag binds the model to the e-graph); a device
+            # profile makes the beam minimize the calibrated objective
             dtype = getattr(prog, "dtype", None) or "f32"
-            return RooflineCostModel(dtype=dtype)
+            return RooflineCostModel(dtype=dtype,
+                                     profile=self.device_profile)
         return TPUCostModel() if self.cost_model == "tpu_v5e" else CostModel()
 
 
@@ -142,6 +150,7 @@ class SaturatedKernel:
                                 + pred.get("bytes_written", 0.0)),
             "predicted_latency_ns": pred.get("latency_ns", 0.0),
             "predicted_bound": pred.get("bound", "n/a"),
+            "device_profile": pred.get("profile"),
             "n_temps": s.n_temps,
             "n_loads": s.n_loads,
             "n_stores": s.n_stores,
@@ -160,19 +169,22 @@ class SaturatedKernel:
         }
 
 
-def predict_choice(ssa: SSAResult, choice, roots, n_stores: int):
+def predict_choice(ssa: SSAResult, choice, roots, n_stores: int,
+                   profile=None):
     """Roofline prediction of an extraction choice in the pipeline's
     reporting units: shape/dtype-aware load pricing bound to the SSA
     e-graph, plus the root stores' write traffic (per-store operand info
     when the SSA store count matches codegen's). Shared with
     ``benchmarks/saturation_stats.py`` so beam-vs-hillclimb deltas are
-    always computed in these exact units."""
+    always computed in these exact units. ``profile`` reports in a
+    calibrated device profile's units instead of the analytic ones."""
     store_infos = ssa.store_infos()
     return ssa.egraph.choice_stats(
         choice, roots, n_stores=n_stores,
         store_infos=store_infos if len(store_infos) == n_stores else None,
         cost_model=RooflineCostModel(
-            dtype=getattr(ssa.prog, "dtype", "f32"), egraph=ssa.egraph))
+            dtype=getattr(ssa.prog, "dtype", "f32"), egraph=ssa.egraph,
+            profile=profile))
 
 
 def saturate_program(prog: KernelProgram,
@@ -207,8 +219,11 @@ def saturate_program(prog: KernelProgram,
     # traffic (known only post-codegen), regardless of which cost model
     # drove extraction — ablations compare in the same units. Stores are
     # priced per target operand (shape after indexing, declared dtype).
+    # A configured device profile reports in its calibrated units.
     predicted = predict_choice(ssa, extraction.choice, extraction.roots,
-                               gen.stats.n_stores)
+                               gen.stats.n_stores,
+                               profile=cfg.device_profile
+                               if cfg.cost_model == "roofline" else None)
     if predicted is not None:
         extraction.predicted = predicted
     return SaturatedKernel(kernel=gen, ssa=ssa, extraction=extraction,

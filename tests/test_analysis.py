@@ -139,6 +139,7 @@ def _latency_of(eg, choice, roots):
 
 @pytest.mark.parametrize("kernel", ["bt_like", "sp_like", "lbm_like",
                                     "ft_like", "ep_like"])
+@pytest.mark.slow
 def test_roofline_extraction_never_slower_than_paper(kernel):
     from benchmarks.kernel_suite import SUITE
     prog = SUITE[kernel]()

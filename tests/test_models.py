@@ -23,6 +23,7 @@ def _batch(cfg, B=2, S=32, seed=1):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_train_step(arch):
     cfg = get_smoke_config(arch)
@@ -35,6 +36,7 @@ def test_smoke_train_step(arch):
         assert np.isfinite(np.asarray(leaf, np.float32)).all()
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_smoke_prefill_decode(arch):
     cfg = get_smoke_config(arch)
@@ -74,6 +76,7 @@ def test_prefill_matches_full_forward(arch):
 
 @pytest.mark.parametrize("arch", ["minitron_4b", "mamba2_1p3b",
                                   "zamba2_2p7b"])
+@pytest.mark.slow
 def test_decode_matches_teacher_forcing(arch):
     """decode_step over a prompt reproduces full-forward logits stepwise."""
     cfg = get_smoke_config(arch)
@@ -150,6 +153,7 @@ def test_hybrid_shared_block_is_tied():
     assert "attn" not in params["layers"]
 
 
+@pytest.mark.slow
 def test_f8_kv_cache_decode():
     """fp8 KV cache (100B+ serving option): decode tracks the bf16-cache
     full-forward logits within fp8 quantization tolerance."""

@@ -11,6 +11,7 @@ import pytest
 from repro.core import MODES, SaturatorConfig, saturate_all_modes
 
 
+@pytest.mark.slow
 def test_paper_claim_direction_on_suite():
     """ACCSAT never worse than CSE, CSE never worse than baseline, on the
     paper cost model — the Fig. 2 ordering."""
@@ -42,6 +43,7 @@ def test_ep_fma_like_paper():
     assert ks["cse_sat"].kernel.stats.n_ops < ks["cse"].kernel.stats.n_ops
 
 
+@pytest.mark.slow
 def test_saturated_kernels_run_inside_jitted_train_step(tmp_path):
     """The saturator's generated code is live inside the real train path
     (rmsnorm/swiglu/rotary/adamw all route through generated kernels)."""

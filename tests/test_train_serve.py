@@ -8,6 +8,7 @@ from repro.launch.train import build_trainer
 from repro.launch.serve import Request, Server
 
 
+@pytest.mark.slow
 def test_train_loss_decreases(tmp_path):
     tr = build_trainer("minitron-4b", smoke=True, steps=20, batch=8,
                        seq=64, ckpt_dir=str(tmp_path), lr=1e-3)
@@ -17,6 +18,7 @@ def test_train_loss_decreases(tmp_path):
     assert np.mean(losses[-5:]) < np.mean(losses[:5])
 
 
+@pytest.mark.slow
 def test_train_recovers_from_failure(tmp_path):
     tr = build_trainer("granite-8b", smoke=True, steps=16, batch=4,
                        seq=32, ckpt_dir=str(tmp_path),
@@ -28,6 +30,7 @@ def test_train_recovers_from_failure(tmp_path):
     assert np.isfinite(out["losses"]).all()
 
 
+@pytest.mark.slow
 def test_train_failure_replay_matches_clean_run(tmp_path):
     """Deterministic data replay: a run interrupted+recovered converges to
     the same losses as an uninterrupted run (same seeds, same steps)."""
@@ -42,6 +45,7 @@ def test_train_failure_replay_matches_clean_run(tmp_path):
     np.testing.assert_allclose(clean, recovered, rtol=2e-3, atol=2e-3)
 
 
+@pytest.mark.slow
 def test_train_with_compression(tmp_path):
     tr = build_trainer("minitron-4b", smoke=True, steps=10, batch=4,
                        seq=32, ckpt_dir=str(tmp_path), compress="int8_ef",
@@ -51,6 +55,7 @@ def test_train_with_compression(tmp_path):
     assert out["losses"][-1] < out["losses"][0] * 1.2
 
 
+@pytest.mark.slow
 def test_serve_continuous_batching():
     srv = Server("mamba2-1.3b", smoke=True, max_batch=3)
     rng = np.random.default_rng(0)
