@@ -55,7 +55,7 @@ try:
 except ImportError as e:
     die_with_import_help(e)
 
-MEASUREMENTS_SCHEMA_VERSION = 1
+MEASUREMENTS_SCHEMA_VERSION = 2   # 1 = PR-4, no schedule column
 PROFILE_DIR = ROOT / "experiments" / "device_profiles"
 DEFAULT_OUT = OUT_ROOT / "measurements.json"
 
@@ -66,6 +66,13 @@ TILE_KERNELS = ("rmsnorm", "rmsnorm_gated", "layernorm", "swiglu", "gelu",
                 "rotary", "residual_scale", "softmax", "adamw",
                 "sgd_momentum", "ssd_gate", "moe_router", "l2_clip")
 SMOKE_KERNELS = ("swiglu", "rmsnorm")
+# every tile kernel is timed under each statement order (PR 5): same
+# extracted term, different emission schedule
+SCHEDULES = ("source", "bulk", "cost")
+# the cost-driven schedule is priced with the committed PR-4 interpret
+# profile when present, so the measured order is the calibrated
+# objective's pick, not the analytic guess
+SCHED_PROFILE = "cpu_pallas_interpret"
 
 
 def _backend() -> str:
@@ -93,32 +100,104 @@ def tile_inputs_for(prog, seed: int = 0):
     return arrays, scalars
 
 
-def measure_tile_kernel(name: str, reps: int, warmup: int = 3) -> dict:
-    """Median per-call wall time of one tile program's Pallas kernel on a
-    single (8, 128) tile (grid of one → per-call == per-instance)."""
-    from repro.analysis import kernel_features
+def _sched_profile_name():
+    """The committed calibrated profile driving the cost-schedule
+    search, if present (fresh checkouts without profiles fall back to
+    the analytic model)."""
+    return (SCHED_PROFILE
+            if (PROFILE_DIR / f"{SCHED_PROFILE}.json").exists() else None)
+
+
+def _tile_op_for(name: str, schedule: str):
     from repro.kernels.tile_programs import get_tile_op
-    op = get_tile_op(name)
-    arrays, scalars = tile_inputs_for(op.sk.ssa.prog)
+    return get_tile_op(name, schedule=schedule,
+                       device_profile=(_sched_profile_name()
+                                       if schedule == "cost" else None))
+
+
+def _tile_features(op, schedule: str) -> dict:
+    """Schedule features of the order actually emitted: the Pallas
+    generator's own ScheduleResult for "cost", a recomputed named order
+    otherwise (deterministic either way)."""
+    from repro.analysis import kernel_features
+    from repro.core import compute_schedule
+    sr = op.pk.schedule
+    if sr is None:
+        sr = compute_schedule(op.sk.ssa, dict(op.sk.extraction.choice),
+                              mode=schedule)
+    return kernel_features(op.sk, schedule=sr).to_dict()
+
+
+def measure_tile_schedules(name: str, reps: int, warmup: int = 3,
+                           schedules=SCHEDULES) -> list:
+    """Median per-call wall time of one tile program's Pallas kernel on
+    a single (8, 128) tile (grid of one → per-call == per-instance),
+    under every statement ``schedule``.
+
+    The schedules are timed **interleaved round-robin** (rep 1 of every
+    schedule, then rep 2, ...): all orders run the same number of ops,
+    so sequential blocks would hand whichever schedule ran first any
+    machine-load drift; interleaving gives every schedule the same
+    drift profile and the medians compare cleanly. The within-cycle
+    order additionally *rotates* every rep — a fixed order hands the
+    later slots the earlier calls' GC/allocator debt, which showed up
+    as a systematic per-position bias — and collection runs between
+    cycles, outside the timed region.
+    """
+    import gc
+    ops = {s: _tile_op_for(name, s) for s in schedules}
+    arrays, scalars = tile_inputs_for(next(iter(ops.values())).sk.ssa.prog)
     args = [jax.numpy.asarray(a) for a in arrays]
 
-    def call():
-        out = op.apply(*args, **scalars)
-        return jax.block_until_ready(out)
+    def call(op):
+        return jax.block_until_ready(op.apply(*args, **scalars))
 
     for _ in range(warmup):
-        call()
-    times = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        call()
-        times.append(time.perf_counter() - t0)
+        for op in ops.values():
+            call(op)
+    times = {s: [] for s in schedules}
+    order = list(schedules)
+    gc_was_enabled = gc.isenabled()
+    try:
+        for rep in range(reps):
+            gc.collect()
+            gc.disable()
+            rot = rep % len(order)
+            for s in order[rot:] + order[:rot]:
+                t0 = time.perf_counter()
+                call(ops[s])
+                times[s].append(time.perf_counter() - t0)
+            if gc_was_enabled:
+                gc.enable()
+    finally:
+        if gc_was_enabled:
+            gc.enable()
     kind = ("pallas_interpret" if _backend() == "cpu"
             else "pallas_compiled")
-    return {"kernel": name, "group": "tile", "measured_kind": kind,
-            "measured_ns": statistics.median(times) * 1e9,
-            "reps": reps, "warmup": warmup,
-            "features": kernel_features(op.sk).to_dict()}
+    rows = []
+    for s in schedules:
+        row = {"kernel": name, "group": "tile", "measured_kind": kind,
+               "schedule": s,
+               "measured_ns": statistics.median(times[s]) * 1e9,
+               "reps": reps, "warmup": warmup,
+               "features": _tile_features(ops[s], s)}
+        if s != "bulk" and "bulk" in times:
+            # paired per-rep delta vs the bulk order measured in the
+            # same interleaved cycle: correlated machine-load noise
+            # cancels, so this is the statistic the measured gate uses
+            row["paired_vs_bulk_pct"] = statistics.median(
+                100.0 * (c - b) / b
+                for c, b in zip(times[s], times["bulk"]))
+        rows.append(row)
+    return rows
+
+
+def measure_tile_kernel(name: str, reps: int, warmup: int = 3,
+                        schedule: str = "bulk") -> dict:
+    """Single-schedule measurement (the PR-4 entry point, kept for the
+    smoke path and ad-hoc use)."""
+    return measure_tile_schedules(name, reps, warmup,
+                                  schedules=(schedule,))[0]
 
 
 # ---------------------------------------------------------------------------
@@ -151,16 +230,20 @@ def measure_suite_kernel(name: str, reps: int, n: int = 64 * 64,
 # ---------------------------------------------------------------------------
 # Harness
 # ---------------------------------------------------------------------------
-def measure_all(kernels=None, reps: int = 5, n: int = 64 * 64) -> dict:
+def measure_all(kernels=None, reps: int = 5, n: int = 64 * 64,
+                schedules=SCHEDULES) -> dict:
     """Measure every requested kernel; returns the measurements document
-    (also the ``measure`` section of ``benchmarks/run.py``)."""
+    (also the ``measure`` section of ``benchmarks/run.py``). Tile
+    kernels are timed once per statement schedule — same extracted
+    term, different emission order."""
     from benchmarks.kernel_suite import SUITE
     from repro.analysis import DEFAULT_PARAMS, predict_ns, KernelFeatures
     rows = []
     for name in TILE_KERNELS:
         if kernels and name not in kernels:
             continue
-        rows.append(measure_tile_kernel(name, reps))
+        rows.extend(measure_tile_schedules(name, reps,
+                                           schedules=schedules))
     for name in SUITE:
         if kernels and name not in kernels:
             continue
@@ -175,6 +258,15 @@ def measure_all(kernels=None, reps: int = 5, n: int = 64 * 64) -> dict:
 def fit_profiles(doc: dict, out_dir: pathlib.Path = PROFILE_DIR) -> list:
     """Fit one device profile per measured_kind group.
 
+    Tile-kernel groups are fitted from their **cost-schedule** rows with
+    the PR-5 schedule features (per-load overlap windows), yielding a
+    schedule-aware ``<backend>_<kind>_sched`` profile; the committed
+    PR-4 ``<backend>_<kind>`` profile (bulk schedule, no schedule
+    features) is left untouched so the two stay comparable in CI. The
+    fitted sched profile additionally embeds every schedule's measured
+    medians (``fit["schedule_medians"]``) — the bench-regression gate's
+    measured cost-vs-bulk leg reads them without re-timing.
+
     A fit is *promoted* into ``experiments/device_profiles/`` (and from
     there enforced by the bench-regression CI gate) only when it clears
     the acceptance bar — Spearman >= 0.8 and strictly better MAPE than
@@ -187,7 +279,18 @@ def fit_profiles(doc: dict, out_dir: pathlib.Path = PROFILE_DIR) -> list:
     from repro.analysis import SPEARMAN_FLOOR, KernelFeatures, fit_profile
     groups = {}
     for r in doc["rows"]:
+        sched = r.get("schedule")
+        if r.get("group") == "tile" and sched is not None \
+                and sched != "cost":
+            continue   # only the cost-schedule rows are fitted
         groups.setdefault(r["measured_kind"], []).append(r)
+    medians = {}
+    for r in doc["rows"]:
+        if r.get("group") == "tile" and r.get("schedule") is not None:
+            entry = medians.setdefault(r["kernel"], {})
+            entry[r["schedule"]] = r["measured_ns"]
+            if r["schedule"] == "cost" and "paired_vs_bulk_pct" in r:
+                entry["cost_vs_bulk_paired_pct"] = r["paired_vs_bulk_pct"]
     written = []
     for kind, rows in sorted(groups.items()):
         if len(rows) < 2:
@@ -196,12 +299,18 @@ def fit_profiles(doc: dict, out_dir: pathlib.Path = PROFILE_DIR) -> list:
         feats = [KernelFeatures.from_dict(r["features"]) for r in rows]
         meas = [r["measured_ns"] for r in rows]
         backend = doc["backend"]
+        sched_group = rows[0].get("group") == "tile"
         # profile file stem: <measured device>_<path>, e.g.
-        # cpu_pallas_interpret, cpu_jax_grid, tpu_pallas_compiled
+        # cpu_pallas_interpret_sched, cpu_jax_grid, tpu_pallas_compiled
         name = (f"{backend}_jax_grid" if kind == f"jax_{backend}_grid"
                 else f"{backend}_{kind}")
+        if sched_group:
+            name += "_sched"
         prof = fit_profile(feats, meas, name=name, chip=backend,
                            measured_kind=kind)
+        if sched_group and medians:
+            prof.fit["schedule_medians"] = medians
+            prof.fit["schedule_mode"] = "cost"
         f = prof.fit
         ok = (f["spearman"] >= SPEARMAN_FLOOR
               and f["mape_pct"] < f["uncalibrated_mape_pct"])
@@ -209,6 +318,9 @@ def fit_profiles(doc: dict, out_dir: pathlib.Path = PROFILE_DIR) -> list:
         print(f"fitted {name}: {len(rows)} kernels  "
               f"MAPE {f['mape_pct']:.1f}% (uncal {f['uncalibrated_mape_pct']:.1f}%)  "
               f"Spearman {f['spearman']:.3f} (uncal {f['uncalibrated_spearman']:.3f})")
+        if f.get("kernels") and prof.params.overlap_efficiency is not None:
+            print(f"  fitted overlap_efficiency "
+                  f"{prof.params.overlap_efficiency:.3f}")
         if ok:
             written.append(path)
         else:
@@ -219,10 +331,16 @@ def fit_profiles(doc: dict, out_dir: pathlib.Path = PROFILE_DIR) -> list:
 
 def smoke() -> int:
     """CI calibration smoke: fit 2 tile kernels in interpret mode and
-    assert the resulting profile round-trips and scores sanely."""
+    assert the resulting profile round-trips and scores sanely. Uses
+    the cost-driven schedule, so the schedule features (per-load
+    overlap windows) flow through fit and persistence end-to-end."""
     from repro.analysis import (DeviceProfile, KernelFeatures, check_profile,
                                 fit_profile, load_profile)
-    rows = [measure_tile_kernel(k, reps=3) for k in SMOKE_KERNELS]
+    rows = [measure_tile_kernel(k, reps=3, schedule="cost")
+            for k in SMOKE_KERNELS]
+    for r in rows:
+        assert r["features"].get("sched_loads"), \
+            "cost-schedule measurement lost its schedule features"
     feats = [KernelFeatures.from_dict(r["features"]) for r in rows]
     meas = [r["measured_ns"] for r in rows]
     prof = fit_profile(feats, meas, name="smoke", chip=_backend(),
@@ -253,6 +371,9 @@ def main(argv=None) -> int:
                     help="median-of-N timing repeats (default 9)")
     ap.add_argument("--n", type=int, default=64 * 64,
                     help="suite grid size (default 4096 threads)")
+    ap.add_argument("--schedules", default=",".join(SCHEDULES),
+                    help="comma-separated statement schedules to time "
+                         f"per tile kernel (default {','.join(SCHEDULES)})")
     ap.add_argument("--fit", action="store_true",
                     help="fit device profiles from the measurements and "
                          f"save them under {PROFILE_DIR}")
@@ -264,14 +385,16 @@ def main(argv=None) -> int:
     if args.smoke:
         return smoke()
     kernels = set(args.kernels.split(",")) if args.kernels else None
-    doc = measure_all(kernels=kernels, reps=args.reps, n=args.n)
+    doc = measure_all(kernels=kernels, reps=args.reps, n=args.n,
+                      schedules=tuple(args.schedules.split(",")))
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(doc, indent=1) + "\n")
-    print(f"wrote {args.out} ({len(doc['rows'])} kernels, "
+    print(f"wrote {args.out} ({len(doc['rows'])} rows, "
           f"backend={doc['backend']})")
     for r in doc["rows"]:
-        print(f"  {r['kernel']:24s} {r['measured_ns']:14.1f} ns  "
-              f"[{r['measured_kind']}]")
+        sched = r.get("schedule", "-")
+        print(f"  {r['kernel']:24s} {sched:>6s} {r['measured_ns']:14.1f} ns"
+              f"  [{r['measured_kind']}]")
     if args.fit:
         written = fit_profiles(doc)
         for p in written:

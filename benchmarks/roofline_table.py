@@ -75,6 +75,65 @@ def main():
     print(f"wrote {OUT} ({len(cells)} cells)")
 
 
+def schedule_lines():
+    """Measured statement-schedule section from the committed
+    schedule-aware profile's embedded medians (deterministic: renders
+    committed evidence, never re-times)."""
+    sys.path.insert(0, str(ROOT / "src"))
+    from repro.analysis import load_profile
+    path = (ROOT / "experiments" / "device_profiles"
+            / "cpu_pallas_interpret_sched.json")
+    lines = [
+        "",
+        "## Statement schedules (measured, committed evidence)",
+        "",
+        "Median per-call times of every tile kernel under each emitted",
+        "statement order — same extracted term, only the load/compute/",
+        "store order moves (`benchmarks/measure.py --schedules ...`).",
+        "`measured_kind` flags the regime; on `pallas_interpret` the",
+        "body executes op-by-op in Python, so per-op dispatch dominates",
+        "and order effects sit near the noise floor — the CI gate",
+        "requires cost <= bulk within 2%, and the",
+        "schedule-aware *predicted* ordering (cost <= bulk <= source) is",
+        "the deterministic invariant. On compiled backends the overlap",
+        "distance is physical (DMA issue vs consumer).",
+    ]
+    if not path.exists():
+        lines += ["", "*(no committed schedule-aware profile)*"]
+        return lines
+    prof = load_profile(path)
+    medians = prof.fit.get("schedule_medians", {})
+    if not medians:
+        lines += ["", "*(profile has no embedded schedule medians)*"]
+        return lines
+    from repro.analysis import schedule_paired_pct  # single owner of
+    # the gated statistic — the table must report what CI enforces
+    better = [k for k, m in medians.items()
+              if (schedule_paired_pct(m) or 0.0) < 0.0]
+    lines += [
+        "",
+        f"`{prof.name}` — {prof.chip}, `{prof.measured_kind}`; "
+        f"cost schedule measured faster than bulk (paired per-rep "
+        f"median) on **{len(better)}/{len(medians)}** kernels "
+        f"({', '.join(sorted(better)) or 'none'}).",
+        "",
+        "| kernel | source_ns | bulk_ns | cost_ns | cost vs bulk "
+        "(paired %) |",
+        "|---|---|---|---|---|",
+    ]
+
+    def fmt(x, spec):
+        return format(x, spec) if x is not None else "—"
+
+    for k in sorted(medians):
+        m = medians[k]
+        lines.append(
+            f"| {k} | {fmt(m.get('source'), '.0f')} | "
+            f"{fmt(m.get('bulk'), '.0f')} | {fmt(m.get('cost'), '.0f')} | "
+            f"{fmt(schedule_paired_pct(m), '+.2f')} |")
+    return lines
+
+
 def calibration_lines():
     """Predicted-vs-measured section from the committed device profiles
     (deterministic: renders each profile's stored fit evidence, so the
@@ -146,19 +205,30 @@ def kernel_table(res=None):
         "predicted-latency delta vs the PR-2 multi-start hill climb; the",
         "structural beam <= hillclimb guarantee is on the store-free DAG",
         "objective (gated in CI), so a negative delta marks a strictly",
-        "better selection. The calibration section below tracks these",
-        "predictions against measured times (benchmarks/measure.py).",
+        "better selection. `sched Δ%` is the cost-driven statement",
+        "schedule's predicted latency vs the paper's bulk load under the",
+        "schedule-aware objective (load→compute overlap distance + VMEM",
+        "pressure, repro.core.schedule); CI gates cost <= bulk <= source",
+        "per kernel. The calibration section below tracks predictions",
+        "against measured times (benchmarks/measure.py).",
         "",
-        "| kernel | flops | bytes | latency_ns | bound | beam Δ% |",
-        "|---|---|---|---|---|---|",
+        "| kernel | flops | bytes | latency_ns | bound | beam Δ% |"
+        " sched Δ% |",
+        "|---|---|---|---|---|---|---|",
     ]
     for r in res["rows"]:
         delta = r.get("beam_vs_hillclimb_pct")
+        sp = r.get("schedule_predicted") or {}
+        sched_delta = (100.0 * (sp["cost"] - sp["bulk"]) / sp["bulk"]
+                       if sp.get("bulk") else None)
         lines.append(
             f"| {r['kernel']} | {r['predicted_flops']:.0f} | "
             f"{r['predicted_bytes']:.0f} | "
             f"{r['predicted_latency_ns']:.2f} | {r['predicted_bound']} | "
-            f"{'' if delta is None else format(delta, '+.2f')} |")
+            f"{'' if delta is None else format(delta, '+.2f')} | "
+            f"{'' if sched_delta is None else format(sched_delta, '+.2f')}"
+            " |")
+    lines += schedule_lines()
     lines += calibration_lines()
     KOUT.parent.mkdir(parents=True, exist_ok=True)
     KOUT.write_text("\n".join(lines) + "\n")

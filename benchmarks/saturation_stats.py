@@ -19,8 +19,8 @@ from __future__ import annotations
 import statistics
 from typing import Dict, List, Optional
 
-from repro.core import (SaturatorConfig, extract_dag, optimality_gap,
-                        saturate_program)
+from repro.core import (SaturatorConfig, compute_schedule, extract_dag,
+                        optimality_gap, saturate_program)
 from repro.core.pipeline import predict_choice
 from repro.kernels.tile_programs import PROGRAMS
 from .kernel_suite import SUITE
@@ -81,6 +81,12 @@ def run_saturation_stats(compare_hillclimb: bool = True,
             "beam_generations": rep["beam_generations"],
             "beam_expanded": rep["beam_expanded"],
         }
+        # schedule-aware predicted latency of every named statement
+        # order (analytic units, deterministic search budget) — the
+        # gate's cost <= bulk <= source leg reads these
+        sched = compute_schedule(sk.ssa, dict(sk.extraction.choice),
+                                 mode="cost")
+        row["schedule_predicted"] = dict(sched.predicted_by_mode)
         # the oracle must judge in the same units the extraction used:
         # same dtype-aware model, bound to the same e-graph
         gap: Optional[float] = optimality_gap(

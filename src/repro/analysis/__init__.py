@@ -9,24 +9,24 @@ the HLO bridge (:mod:`.hlo`).
 from .opstats import (DTYPE_BYTES, TILE_ELEMS, TILE_SHAPE, ArrayInfo,
                       OpStats, dtype_byte_width, node_stats, op_pass_class,
                       store_stats)
-from .latency import LatencyModel
+from .latency import LatencyModel, ScheduleEvent
 from .cost_model import RooflineCostModel
 from .hlo import latency_from_hlo, stats_from_hlo, stats_from_report
 from .calibrate import (DEFAULT_PARAMS, SPEARMAN_FLOOR, CalibrationError,
                         CalibrationParams, DeviceProfile, KernelFeatures,
                         check_profile, evaluate_params, fit_params,
                         fit_profile, kernel_features, load_profile, mape_pct,
-                        predict_ns, spearman)
+                        predict_ns, schedule_paired_pct, spearman)
 
 __all__ = [
     "OpStats", "node_stats", "op_pass_class", "store_stats",
     "TILE_ELEMS", "TILE_SHAPE", "DTYPE_BYTES",
     "ArrayInfo", "dtype_byte_width",
-    "LatencyModel", "RooflineCostModel",
+    "LatencyModel", "ScheduleEvent", "RooflineCostModel",
     "latency_from_hlo", "stats_from_hlo", "stats_from_report",
     "DEFAULT_PARAMS", "SPEARMAN_FLOOR",
     "CalibrationError", "CalibrationParams", "DeviceProfile",
     "KernelFeatures", "check_profile", "evaluate_params", "fit_params",
     "fit_profile", "kernel_features", "load_profile", "mape_pct",
-    "predict_ns", "spearman",
+    "predict_ns", "schedule_paired_pct", "spearman",
 ]

@@ -70,17 +70,44 @@ class CalibrationError(ValueError):
     """Unusable profile/measurement data (schema drift, bad fit input)."""
 
 
+def schedule_paired_pct(entry: Mapping) -> Optional[float]:
+    """The gated cost-vs-bulk statistic of one ``schedule_medians``
+    entry: the paired per-rep median when the measurement recorded it,
+    else the raw median delta; None when bulk/cost are missing. Single
+    owner — the bench-regression gate and the rendered latency table
+    must report the same number."""
+    p = entry.get("cost_vs_bulk_paired_pct")
+    if p is not None:
+        return float(p)
+    bulk, cost = entry.get("bulk"), entry.get("cost")
+    if not bulk or cost is None:
+        return None
+    return 100.0 * (float(cost) - float(bulk)) / float(bulk)
+
+
 # ---------------------------------------------------------------------------
 # Feature extraction
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class KernelFeatures:
-    """Per-tile-instance hardware features of one extracted kernel."""
+    """Per-tile-instance hardware features of one extracted kernel.
+
+    The PR-5 schedule features describe the *emitted statement order*:
+    ``sched_loads`` carries, per load, ``(bytes, gap_passes,
+    gap_loads)`` — the load's HBM bytes and the unweighted VPU passes /
+    load-dispatch slots issued between it and its first consumer under
+    the generated schedule — and ``peak_live_bytes`` the schedule's peak
+    VMEM working set. ``None``/0 (every pre-PR-5 measurement) keeps the
+    position-independent formula.
+    """
     kernel: str
     class_passes: Mapping[str, float]   # op-class -> total VPU passes
     mxu_flops: float = 0.0
     hbm_bytes: float = 0.0              # loads + root stores, dtype-aware
     flops: float = 0.0                  # reporting only
+    sched_loads: Optional[Tuple[Tuple[float, float, float], ...]] = None
+    peak_live_bytes: float = 0.0
+    sched_mode: Optional[str] = None    # provenance: bulk|source|cost
 
     @property
     def vpu_passes(self) -> float:
@@ -89,25 +116,36 @@ class KernelFeatures:
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["class_passes"] = dict(self.class_passes)
+        if self.sched_loads is not None:
+            d["sched_loads"] = [list(t) for t in self.sched_loads]
         return d
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "KernelFeatures":
+        sl = d.get("sched_loads")
         return cls(kernel=d["kernel"],
                    class_passes={k: float(v)
                                  for k, v in d["class_passes"].items()},
                    mxu_flops=float(d.get("mxu_flops", 0.0)),
                    hbm_bytes=float(d.get("hbm_bytes", 0.0)),
-                   flops=float(d.get("flops", 0.0)))
+                   flops=float(d.get("flops", 0.0)),
+                   sched_loads=(None if sl is None else
+                                tuple(tuple(float(x) for x in t)
+                                      for t in sl)),
+                   peak_live_bytes=float(d.get("peak_live_bytes", 0.0)),
+                   sched_mode=d.get("sched_mode"))
 
 
-def kernel_features(sk) -> KernelFeatures:
+def kernel_features(sk, schedule=None) -> KernelFeatures:
     """Calibration features of a pipeline result (``SaturatedKernel``).
 
     Prices the *extracted* choice — the exact nodes the beam committed
     to — with the same shape/dtype-aware model extraction used, plus the
     root stores' write traffic, so fitted coefficients talk about the
-    code that actually ran.
+    code that actually ran. ``schedule`` (a
+    :class:`repro.core.schedule.ScheduleResult`) additionally records
+    the emitted order's per-load overlap windows and peak VMEM live
+    set, enabling the position-dependent fit.
     """
     from repro.core.extract import choice_nodes  # deferred: core imports us
     from .cost_model import RooflineCostModel
@@ -142,10 +180,18 @@ def kernel_features(sk) -> KernelFeatures:
         p = _PASSES[kls]
         if p > 0:
             classes[kls] = classes.get(kls, 0.0) + p
+    sched_loads = peak_live = mode = None
+    if schedule is not None:
+        sched_loads = tuple(schedule.load_windows())
+        peak_live = schedule.peak_live_bytes
+        mode = schedule.mode
     return KernelFeatures(kernel=ssa.prog.name, class_passes=classes,
                           mxu_flops=stats.mxu_flops,
                           hbm_bytes=stats.total_bytes,
-                          flops=stats.total_flops)
+                          flops=stats.total_flops,
+                          sched_loads=sched_loads,
+                          peak_live_bytes=peak_live or 0.0,
+                          sched_mode=mode)
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +205,12 @@ class CalibrationParams:
     base_ns: float = 0.0
     vpu_pass_coeffs: Mapping[str, float] = dataclasses.field(
         default_factory=dict)   # missing: 1.0 (0.0 for memory_dispatch)
+    # -- schedule-aware terms (PR 5; None/0 == the PR-4 formula) -----------
+    # Fraction of the issue time between a load and its first consumer
+    # that hides the load's transfer (fitted against schedule features).
+    overlap_efficiency: Optional[float] = None
+    # Spill-traffic multiplier on VMEM working set beyond the budget.
+    vmem_pressure_coeff: float = 0.0
 
     def coeff(self, kls: str) -> float:
         d = self.vpu_pass_coeffs.get(kls)
@@ -173,12 +225,16 @@ class CalibrationParams:
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "CalibrationParams":
+        eff = d.get("overlap_efficiency")
         return cls(overlap_slack_compute=float(d["overlap_slack_compute"]),
                    overlap_slack_memory=float(d["overlap_slack_memory"]),
                    hbm_efficiency=float(d["hbm_efficiency"]),
                    base_ns=float(d["base_ns"]),
                    vpu_pass_coeffs={k: float(v) for k, v in
-                                    d.get("vpu_pass_coeffs", {}).items()})
+                                    d.get("vpu_pass_coeffs", {}).items()},
+                   overlap_efficiency=None if eff is None else float(eff),
+                   vmem_pressure_coeff=float(
+                       d.get("vmem_pressure_coeff", 0.0)))
 
 
 DEFAULT_PARAMS = CalibrationParams()
@@ -207,17 +263,50 @@ def predict_ns(feat: KernelFeatures, params: CalibrationParams,
                chip=None, tile_elems: int = TILE_ELEMS) -> float:
     """Latency of one kernel under ``params`` — the same formula
     :class:`LatencyModel` computes once a profile is loaded (kept in
-    lock-step by ``tests/test_calibration.py``)."""
+    lock-step by ``tests/test_calibration.py``).
+
+    With a fitted ``overlap_efficiency`` the memory axis is reduced by
+    the schedule's hidden transfer time before the roofline max: the
+    per-load windows in ``feat.sched_loads`` when the measurement
+    recorded them (position-dependent — each load hides at most
+    ``eff × gap``), else the aggregate best-schedule bound
+    ``min(memory, eff × compute)``. ``overlap_efficiency=None`` (all
+    PR-4 profiles) is bit-identical to the PR-4 formula.
+    """
     chip = chip if chip is not None else _chip()
     per_pass_ns = tile_elems / chip.vpu_elems_per_s * 1e9
     compute = sum(p * params.coeff(k)
                   for k, p in feat.class_passes.items()) * per_pass_ns
     compute += feat.mxu_flops / chip.peak_flops_bf16 * 1e9
-    memory = feat.hbm_bytes / (chip.hbm_bw * params.hbm_efficiency) * 1e9
+    bw = chip.hbm_bw * params.hbm_efficiency
+    memory = feat.hbm_bytes / bw * 1e9
+    if params.overlap_efficiency is not None:
+        eff = params.overlap_efficiency
+        if feat.sched_loads:
+            # gap windows are recorded as unweighted pass counts; price
+            # them with the fitted coefficients (the "simple" class as
+            # the stand-in for the window's compute mix) so the overlap
+            # term lives on the same scale as the fitted memory axis
+            dispatch = params.coeff(MEM_DISPATCH_CLASS)
+            gap_coeff = params.coeff("simple")
+            hidden = 0.0
+            for nbytes, gap_passes, gap_loads in feat.sched_loads:
+                m_i = nbytes / bw * 1e9
+                gap_ns = (gap_passes * gap_coeff
+                          + gap_loads * dispatch) * per_pass_ns
+                hidden += min(m_i, eff * gap_ns)
+            hidden = min(hidden, memory)
+        else:
+            hidden = min(memory, eff * compute)
+        memory -= hidden
+    pressure = 0.0
+    if params.vmem_pressure_coeff and feat.peak_live_bytes:
+        spill = max(0.0, feat.peak_live_bytes - chip.vmem_bytes / 4)
+        pressure = params.vmem_pressure_coeff * spill / bw * 1e9
     slack = (params.overlap_slack_compute if compute >= memory
              else params.overlap_slack_memory)
-    return params.base_ns + max(compute, memory) + slack * min(compute,
-                                                               memory)
+    return (params.base_ns + max(compute, memory)
+            + slack * min(compute, memory) + pressure)
 
 
 # ---------------------------------------------------------------------------
@@ -311,6 +400,13 @@ def fit_params(feats: Sequence[KernelFeatures],
         raise CalibrationError("measured times must be positive")
     chip = chip if chip is not None else _chip()
     classes = sorted({k for f in feats for k in f.class_passes})
+    # schedule-aware terms are only identifiable when the measurements
+    # recorded per-load overlap windows; starting at eff=0 makes the
+    # schedule-aware fit begin exactly at the PR-4 formula, so added
+    # freedom can only lower the loss
+    has_sched = any(f.sched_loads for f in feats)
+    over_budget = any(f.peak_live_bytes > chip.vmem_bytes / 4
+                      for f in feats)
 
     # scale-matched starts: uncalibrated predictions are ns-scale while
     # interpret-mode measurements are µs/ms-scale; starting coefficients
@@ -327,7 +423,8 @@ def fit_params(feats: Sequence[KernelFeatures],
         return CalibrationParams(
             overlap_slack_compute=slack, overlap_slack_memory=slack,
             hbm_efficiency=hbm_mul / scale, base_ns=0.0,
-            vpu_pass_coeffs={k: scale * coeff_mul for k in classes})
+            vpu_pass_coeffs={k: scale * coeff_mul for k in classes},
+            overlap_efficiency=0.0 if has_sched else None)
 
     starts = (
         start(1.0, 1.0, 0.05),       # balanced (the analytic prior)
@@ -376,6 +473,19 @@ def fit_params(feats: Sequence[KernelFeatures],
                     dataclasses.replace(params, **{
                         field: min(max(getattr(params, field) + d, 0.0),
                                    2.0)})
+                    for d in slack_steps))
+            if has_sched:
+                try_param(lambda: (
+                    dataclasses.replace(params, overlap_efficiency=min(
+                        max((params.overlap_efficiency or 0.0) + d, 0.0),
+                        1.0))
+                    for d in slack_steps))
+            if over_budget:
+                # only identifiable when some kernel's peak live set
+                # exceeds the budget; otherwise the term is flat at 0
+                try_param(lambda: (
+                    dataclasses.replace(params, vmem_pressure_coeff=max(
+                        params.vmem_pressure_coeff + d, 0.0))
                     for d in slack_steps))
             if not improved:
                 break

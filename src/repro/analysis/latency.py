@@ -25,11 +25,32 @@ coefficients (``pass_coeffs``, applied at node-pricing time by
 :class:`repro.analysis.cost_model.RooflineCostModel` so the aggregate
 ``vpu_passes`` arriving here is already coefficient-weighted). With the
 default values the formula reduces exactly to the uncalibrated model.
+
+Schedule awareness (PR 5)
+-------------------------
+Statement order matters on real machines: a load issued far ahead of its
+first consumer hides its HBM transfer behind the intervening compute,
+one issued right before it stalls. Two layers model this:
+
+* :meth:`LatencyModel.schedule_ns` prices an explicit issue *order* — a
+  sequence of :class:`ScheduleEvent` — with a position-dependent overlap
+  term (per-load exposed transfer = ``max(0, mem − eff × gap)`` where
+  ``gap`` is the issue time between the load and its first consumer)
+  plus a VMEM live-range pressure penalty when the peak live working
+  set exceeds the budget. :mod:`repro.core.schedule` minimizes this
+  objective when searching over legal topological orders.
+* when a fitted ``overlap_efficiency`` is present (schedule-aware device
+  profiles), the *aggregate* :meth:`latency_ns` replaces the scalar
+  ``overlap_slack`` coupling with the best-schedule bound
+  ``memory − min(memory, eff × compute)`` — the extraction beam then
+  optimizes the same objective the downstream scheduler realizes. With
+  ``overlap_efficiency=None`` (the default, and every pre-PR-5 profile)
+  the formula reduces exactly to the PR-4 model.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Dict, Mapping, Optional
+from typing import TYPE_CHECKING, Dict, Mapping, Optional, Sequence
 
 from .opstats import OpStats, TILE_ELEMS, dtype_byte_width
 
@@ -42,6 +63,27 @@ def _default_chip():
     # not be pulled in at module load time
     from repro.core.hardware import DEFAULT_CHIP
     return DEFAULT_CHIP
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleEvent:
+    """One issue slot of an explicit kernel schedule.
+
+    ``issue_ns`` is how long the slot occupies the issue pipeline
+    (compute: its VPU/MXU time; load/store: the calibrated per-access
+    dispatch cost). ``mem_ns`` is the asynchronous HBM transfer the slot
+    starts (0 for compute). ``first_use``/``last_use`` index the event
+    list: the transfer must complete before ``first_use`` issues, and
+    ``bytes_live`` stays resident in VMEM through ``last_use``.
+    ``first_use=-1`` means no later consumer (the transfer drains
+    against everything issued afterwards — how stores behave).
+    """
+    kind: str                    # "load" | "compute" | "store"
+    issue_ns: float = 0.0
+    mem_ns: float = 0.0
+    bytes_live: float = 0.0
+    first_use: int = -1
+    last_use: int = -1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +109,16 @@ class LatencyModel:
     # here (OpStats only carries aggregate passes) — RooflineCostModel
     # scales each node's passes by its class coefficient at pricing time.
     pass_coeffs: Optional[Mapping[str, float]] = None
+    # -- schedule-aware parameters (PR 5) ----------------------------------
+    # Fraction of the issue time between a load and its first consumer
+    # that actually hides the load's HBM transfer. ``None`` keeps the
+    # PR-4 aggregate formula (scalar per-bound slack); a fitted value
+    # switches ``latency_ns`` to the best-schedule bound and is what
+    # ``schedule_ns`` scales its per-load overlap windows by.
+    overlap_efficiency: Optional[float] = None
+    # ns of penalty per byte of VMEM working set beyond the budget,
+    # expressed as a multiplier on the spill traffic's HBM time.
+    vmem_pressure_coeff: float = 0.0
     # Name of the device profile these parameters came from (reporting).
     profile_name: Optional[str] = None
 
@@ -96,6 +148,8 @@ class LatencyModel:
                    overlap_slack_memory=p.overlap_slack_memory,
                    hbm_efficiency=p.hbm_efficiency, base_ns=p.base_ns,
                    pass_coeffs=dict(p.vpu_pass_coeffs),
+                   overlap_efficiency=p.overlap_efficiency,
+                   vmem_pressure_coeff=p.vmem_pressure_coeff,
                    mxu_dtype=mxu_dtype, profile_name=prof.name)
 
     @property
@@ -133,8 +187,74 @@ class LatencyModel:
     def latency_ns(self, stats: OpStats) -> float:
         c = self.compute_ns(stats)
         m = self.memory_ns(stats)
+        if self.overlap_efficiency is not None:
+            # best-schedule bound: the downstream scheduler can hide at
+            # most eff × compute of the memory traffic behind compute
+            # issue slots; the exposed remainder couples via the fitted
+            # per-bound slack exactly as in the PR-4 formula (eff=0
+            # reduces to it bit-for-bit)
+            m = m - min(m, self.overlap_efficiency * c)
         slack = self.slack_compute if c >= m else self.slack_memory
         return self.base_ns + max(c, m) + slack * min(c, m)
+
+    # -- schedule-aware objective (PR 5) ------------------------------------
+    def vmem_budget_bytes(self) -> int:
+        """Working-set budget for the pressure term: a quarter of the
+        chip's VMEM, matching ``pick_row_block``'s headroom for compiler
+        temporaries."""
+        return int(self.chip.vmem_bytes) // 4
+
+    def schedule_ns(self, events: Sequence[ScheduleEvent], *,
+                    vmem_budget_bytes: Optional[int] = None
+                    ) -> Dict[str, float]:
+        """Price an explicit issue order (position-dependent roofline).
+
+        The issue pipeline executes ``events`` in order; each load/store
+        starts an asynchronous HBM transfer at issue time. A transfer is
+        hidden by ``overlap_efficiency`` × the issue time between it and
+        its first consumer (end of schedule for consumer-less stores);
+        the un-hidden remainder is exposed stall time. Loads hold
+        ``bytes_live`` of VMEM from issue through ``last_use``; the peak
+        live set beyond the budget is charged as spill traffic scaled by
+        ``vmem_pressure_coeff``.
+
+        Returns a breakdown dict; ``latency_ns`` is the objective
+        :mod:`repro.core.schedule` minimizes.
+        """
+        eff = (self.overlap_efficiency
+               if self.overlap_efficiency is not None else 1.0)
+        budget = (self.vmem_budget_bytes() if vmem_budget_bytes is None
+                  else vmem_budget_bytes)
+        n = len(events)
+        cum = [0.0] * (n + 1)   # issue time elapsed before slot i
+        for i, ev in enumerate(events):
+            cum[i + 1] = cum[i] + ev.issue_ns
+        exposed = 0.0
+        peak_live = live = 0.0
+        # bytes whose live range ends after slot i (swept in order)
+        drops = [0.0] * (n + 1)
+        for i, ev in enumerate(events):
+            if ev.mem_ns > 0.0:
+                end = ev.first_use if ev.first_use >= 0 else n
+                gap = max(0.0, cum[end] - cum[i + 1])
+                exposed += max(0.0, ev.mem_ns - eff * gap)
+            if ev.bytes_live > 0.0:
+                live += ev.bytes_live
+                last = ev.last_use if ev.last_use >= 0 else n - 1
+                drops[min(last, n - 1) + 1] += ev.bytes_live
+            peak_live = max(peak_live, live)
+            live -= drops[i + 1]
+        spill = max(0.0, peak_live - budget)
+        pressure = (self.vmem_pressure_coeff * spill
+                    / (self.chip.hbm_bw * self.hbm_efficiency) * 1e9)
+        compute = cum[n]
+        return {
+            "latency_ns": self.base_ns + compute + exposed + pressure,
+            "issue_ns": compute,
+            "exposed_mem_ns": exposed,
+            "peak_live_bytes": peak_live,
+            "pressure_ns": pressure,
+        }
 
     def bound(self, stats: OpStats) -> str:
         return "compute" if self.compute_ns(stats) >= self.memory_ns(stats) \

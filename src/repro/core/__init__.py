@@ -18,6 +18,8 @@ from .pipeline import (MODES, SaturatedKernel, SaturatorConfig,
                        saturate_all_modes, saturate_program)
 from .reference import run_reference
 from .rules import (EXTENDED_RULES, PAPER_RULES, TPU_RULES, Rule, run_rules)
+from .schedule import (SCHEDULE_MODES, ScheduleResult, compute_schedule,
+                       is_legal_order, random_topological_order)
 from .ssa import SSAResult, build_ssa
 
 __all__ = [
@@ -32,4 +34,6 @@ __all__ = [
     "saturate_program", "run_reference", "PAPER_RULES", "EXTENDED_RULES",
     "TPU_RULES", "Rule", "run_rules", "build_ssa", "SSAResult",
     "add_expr", "P", "V", "Pattern", "PatVar", "toint",
+    "SCHEDULE_MODES", "ScheduleResult", "compute_schedule",
+    "is_legal_order", "random_topological_order",
 ]

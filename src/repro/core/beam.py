@@ -86,6 +86,10 @@ class Evaluator:
             self._slack_m = float(getattr(lat, "slack_memory",
                                           lat.overlap_slack))
             self._base = float(getattr(lat, "base_ns", 0.0))
+            # schedule-aware profiles: the downstream scheduler hides up
+            # to eff × compute of the memory axis (best-schedule bound);
+            # None keeps the PR-4 formula — mirrors LatencyModel.latency_ns
+            self._overlap_eff = getattr(lat, "overlap_efficiency", None)
             self._stats: Dict[ENode, Tuple[float, float, float]] = {}
         else:
             self._weights: Dict[ENode, float] = {}
@@ -173,6 +177,8 @@ class Evaluator:
         compute = (passes * self._tile / self._vpu
                    + mxu / self._mxu_peak) * 1e9
         memory = nbytes / self._hbm * 1e9
+        if self._overlap_eff is not None:
+            memory -= min(memory, self._overlap_eff * compute)
         if compute >= memory:
             return self._base + compute + self._slack_c * memory
         return self._base + memory + self._slack_m * compute
@@ -208,7 +214,8 @@ class BeamStats:
     """Telemetry of one beam run (reported by the benchmark layer)."""
     width: int = 0
     generations: int = 0
-    expanded: int = 0            # candidate swaps scored
+    expanded: int = 0            # candidate swaps scored (all kinds)
+    coordinated_expanded: int = 0  # of which: coordinated 2-class moves
     seed_cost: float = INF       # best seed before any search
     best_cost: float = INF       # best complete selection found
     hit_deadline: bool = False
@@ -249,6 +256,7 @@ def beam_search(eg: EGraph, cm, seeds: Sequence[Dict[int, ENode]],
                 patience: int = 2,
                 max_generations: int = 64,
                 max_expansions: int = 200_000,
+                coordinated: bool = True,
                 evaluator: Optional[Evaluator] = None,
                 stats: Optional[BeamStats] = None
                 ) -> Tuple[Dict[int, ENode], float]:
@@ -261,6 +269,14 @@ def beam_search(eg: EGraph, cm, seeds: Sequence[Dict[int, ENode]],
     swaps (the deterministic budget), at the wall-clock ``deadline``
     (the safety net), after ``patience`` generations without strict
     improvement, or when a generation yields no unseen states.
+
+    ``coordinated`` additionally proposes **2-class moves**: for every
+    edge (class, chosen child) of a state's DAG, every pair of
+    alternative nodes for the two classes is scored as one move. A
+    non-additive objective (the roofline ``max``) has plateaus where a
+    load and its consumer must change *together* — either single swap
+    is strictly worse, so no 1-swap beam state survives to bridge them;
+    the coordinated neighborhood crosses in one step.
     """
     if width < 1:
         raise ValueError(f"beam width must be >= 1, got {width}")
@@ -315,6 +331,33 @@ def beam_search(eg: EGraph, cm, seeds: Sequence[Dict[int, ENode]],
             def get(cid, _s=state, _b=base_get):
                 n = _s.get(cid)
                 return n if n is not None else _b(cid)
+
+            def trial(_s=state, _g=get):
+                """Score the mutated state; keep it if it clears the
+                frontier bar and is unseen. Caller reverts."""
+                nonlocal frontier, bar
+                cost = ev.cost(_g, roots)
+                st.expanded += 1
+                # once the frontier holds a full beam of plateau
+                # states, only strictly better candidates may enter —
+                # keeps plateau churn (and the seen-set) bounded
+                full = len(frontier) >= 2 * width
+                if cost == INF or cost > bar + 1e-9 \
+                        or (full and cost >= bar - 1e-9):
+                    return
+                tstate = _live_state(eg, _Chain(_s, base), roots)
+                if tstate is None:
+                    return
+                sig = frozenset(tstate.items())
+                if sig in seen:
+                    return
+                seen.add(sig)
+                frontier.append((cost, tstate))
+                if len(frontier) >= 4 * width:
+                    frontier.sort(key=lambda s: s[0])
+                    frontier = frontier[:2 * width]
+                    bar = min(bar, frontier[-1][0])
+
             for cid in sorted(state):
                 cands = ev.candidates(cid)
                 if len(cands) <= 1:
@@ -324,32 +367,40 @@ def beam_search(eg: EGraph, cm, seeds: Sequence[Dict[int, ENode]],
                     if cand == current:
                         continue
                     state[cid] = cand
-                    cost = ev.cost(get, roots)
-                    st.expanded += 1
-                    # once the frontier holds a full beam of plateau
-                    # states, only strictly better candidates may enter —
-                    # keeps plateau churn (and the seen-set) bounded
-                    full = len(frontier) >= 2 * width
-                    if cost == INF or cost > bar + 1e-9 \
-                            or (full and cost >= bar - 1e-9):
-                        state[cid] = current
-                        continue
-                    tstate = _live_state(eg, _Chain(state, base), roots)
+                    trial()
                     state[cid] = current
-                    if tstate is None:
-                        continue
-                    sig = frozenset(tstate.items())
-                    if sig in seen:
-                        continue
-                    seen.add(sig)
-                    frontier.append((cost, tstate))
-                    if len(frontier) >= 4 * width:
-                        frontier.sort(key=lambda s: s[0])
-                        frontier = frontier[:2 * width]
-                        bar = min(bar, frontier[-1][0])
                 if out_of_budget():
                     stop = True
                     break
+            if not stop and coordinated:
+                # 2-class neighborhood: a chosen-DAG edge's two classes
+                # move together (only both-change pairs — single swaps
+                # were already scored above)
+                for cid in sorted(state):
+                    cur_p = state[cid]
+                    for ch in ev.children_of(cur_p):
+                        if ch == cid or ch not in state:
+                            continue
+                        p_cands = ev.candidates(cid)
+                        c_cands = ev.candidates(ch)
+                        if len(p_cands) <= 1 or len(c_cands) <= 1:
+                            continue
+                        cur_c = state[ch]
+                        for np_ in p_cands:
+                            if np_ == cur_p:
+                                continue
+                            for nc in c_cands:
+                                if nc == cur_c:
+                                    continue
+                                state[cid], state[ch] = np_, nc
+                                trial()
+                                st.coordinated_expanded += 1
+                                state[cid], state[ch] = cur_p, cur_c
+                        if out_of_budget():
+                            stop = True
+                            break
+                    if stop:
+                        break
             if stop:
                 break
         if not frontier:

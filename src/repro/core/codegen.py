@@ -12,6 +12,14 @@ Reproduces both halves of the paper's generator:
   static index representation. Memory pressure is front-loaded exactly as
   in the paper's Listing 3.
 
+Since PR 5 statement order is owned by :mod:`repro.core.schedule`: the
+``schedule`` parameter picks ``"source"`` (loads at use sites, the old
+``bulk=False``), ``"bulk"`` (the paper's rule — same bit-identical
+sources as before, with the flush order coming from
+``schedule.legacy_bulk_key`` instead of an ad-hoc sort), or ``"cost"``
+(a cost-driven legal topological order minimizing the schedule-aware
+latency objective; emission then follows the explicit per-region order).
+
 The emitted artifact is Python/JAX source (``jnp``/``lax``), exec'd into a
 callable; the Pallas emitter in :mod:`repro.core.pallasgen` reuses this
 module's scheduler.
@@ -21,11 +29,13 @@ from __future__ import annotations
 import dataclasses
 import sys
 import textwrap
-from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple, Union
 
 from .egraph import EGraph
 from .extract import ExtractionResult
 from .ir import ENode
+from .schedule import (SCHEDULE_MODES, ScheduleResult, compute_schedule,
+                       legacy_bulk_key)
 from .ssa import ArrayCarry, Carry, LoopRegion, Region, SSAResult, StoreEffect
 
 sys.setrecursionlimit(100_000)
@@ -59,6 +69,8 @@ class GeneratedKernel:
     out_arrays: List[str]
     stats: GenStats
     bulk: bool
+    schedule_mode: str = "bulk"            # source | bulk | cost
+    schedule: Optional[ScheduleResult] = None  # set for explicit orders
 
     def __call__(self, *args, **kw):
         return self.fn(*args, **kw)
@@ -160,11 +172,31 @@ class CodeGenerator:
     def __init__(self, ssa: SSAResult, extraction: ExtractionResult, *,
                  bulk: bool = True, fn_name: Optional[str] = None,
                  extra_fns: Optional[Dict[str, Callable]] = None,
-                 reuse_temps: bool = True):
+                 reuse_temps: bool = True,
+                 schedule: Optional[Union[str, ScheduleResult]] = None,
+                 sched_cost_model=None):
         self.ssa = ssa
         self.eg: EGraph = ssa.egraph
         self.choice: Dict[int, ENode] = dict(extraction.choice)
-        self.bulk = bulk
+        # ``schedule`` overrides the legacy bulk flag: a mode name picks a
+        # named order ("bulk" stays bit-identical to bulk=True, "source"
+        # to bulk=False, "cost" searches); a ScheduleResult is emitted
+        # verbatim (the legality-fuzz tests inject arbitrary legal orders
+        # this way). ``sched_cost_model`` prices the cost search — pass
+        # the extraction's (possibly calibrated) roofline model so both
+        # optimize the same objective.
+        if isinstance(schedule, ScheduleResult):
+            self.schedule_mode = schedule.mode
+            self._explicit: Optional[ScheduleResult] = schedule
+        else:
+            if schedule is not None and schedule not in SCHEDULE_MODES:
+                raise ValueError(f"schedule must be one of "
+                                 f"{SCHEDULE_MODES}, got {schedule!r}")
+            self.schedule_mode = schedule if schedule is not None else \
+                ("bulk" if bulk else "source")
+            self._explicit = None
+        self.bulk = self.schedule_mode == "bulk"
+        self._sched_cm = sched_cost_model
         # reuse_temps: True = CSE on (memoize every e-class); False/"lets"
         # = only programmer-named `let` values are reused, reproducing the
         # original source's temporaries (the paper's un-optimized input)
@@ -177,6 +209,18 @@ class CodeGenerator:
         self.stats = GenStats(dag_cost=extraction.dag_cost)
         self._load_regions: Dict[int, Tuple[int, ...]] = {}
         self._region_first_compute: Dict[Tuple[int, ...], bool] = {}
+
+    def _resolve_schedule(self) -> Optional[ScheduleResult]:
+        """The explicit per-region order to emit, or None for the legacy
+        source/bulk paths (which stay bit-identical to pre-PR-5)."""
+        if self._explicit is None and self.schedule_mode == "cost":
+            cm = self._sched_cm if hasattr(self._sched_cm, "latency") \
+                else None   # flat models can't price a schedule
+            if cm is not None and hasattr(cm, "bind_egraph"):
+                cm.bind_egraph(self.eg)
+            self._explicit = compute_schedule(
+                self.ssa, self.choice, mode="cost", cost_model=cm)
+        return self._explicit
 
     # -- choice helpers -----------------------------------------------------
     def node(self, cid: int) -> ENode:
@@ -319,15 +363,15 @@ class CodeGenerator:
         return all(self._deps_ready(c, visiting) for c in n.children)
 
     def _load_sort_key(self, cid: int):
-        n = self.node(cid)
-        arr = self.node(n.children[0])
-        idx_repr = tuple(repr(self.node(c)) for c in n.children[1:])
-        return (str(arr.payload), idx_repr)
+        # the flush order is owned by the schedule subsystem (its "bulk"
+        # order reproduces this exact key), never an ad-hoc sort here
+        return legacy_bulk_key(self.node, cid)
 
     def _flush_loads(self, path: Tuple[int, ...], pending: List[int],
                      lines: List[str], indent: str):
-        """Emit every pending load whose dependencies are resolved, sorted
-        by (array, static index) — the paper's bulk-load rule."""
+        """Emit every pending load whose dependencies are resolved, in
+        the schedule subsystem's bulk order — the paper's bulk-load
+        rule."""
         ready = [c for c in pending if self._deps_ready(c)]
         for cid in sorted(ready, key=self._load_sort_key):
             self.emit_value(cid, lines, indent)
@@ -341,6 +385,11 @@ class CodeGenerator:
     # -- region emission ---------------------------------------------------------------
     def emit_region(self, region: Region, path: Tuple[int, ...],
                     lines: List[str], indent: str):
+        sched = self._explicit.regions.get(path) \
+            if self._explicit is not None else None
+        if sched is not None:
+            self._emit_scheduled(sched, path, lines, indent)
+            return
         pending = [cid for cid, r in self._load_regions.items()
                    if r == path and self.scope.get(cid) is None] \
             if self.bulk else []
@@ -354,6 +403,27 @@ class CodeGenerator:
             self._region_first_compute[path] = True
             if self.bulk:
                 self._flush_loads(path, pending, lines, indent)
+
+    def _emit_scheduled(self, sched, path: Tuple[int, ...],
+                        lines: List[str], indent: str):
+        """Emit one region following an explicit schedule order. Each
+        unit is emitted at its scheduled slot; ``emit_value`` pulls any
+        non-unit leaves (consts, bound vars) inline, and a unit already
+        bound by an earlier recursion is a no-op."""
+        for u in sched.ordered_units():
+            if u.kind in ("load", "compute"):
+                self.emit_value(u.cid, lines, indent)
+                if u.kind == "load" and \
+                        not self._region_first_compute.get(path, False):
+                    self.stats.loads_before_compute += 1
+                else:
+                    self._region_first_compute[path] = True
+            elif u.kind == "store":
+                self._emit_store(u.item, lines, indent)
+                self._region_first_compute[path] = True
+            else:
+                self._emit_loop(u.item, path, lines, indent)
+                self._region_first_compute[path] = True
 
     def _emit_store(self, eff: StoreEffect, lines: List[str], indent: str):
         val = self.emit_value(eff.value_cid, lines, indent)
@@ -456,7 +526,8 @@ class CodeGenerator:
         for a in prog.arrays.values():
             self.scope.bind_sym(f"{a.name}@0", a.name)
             self.scope.bind_sym(f"{a.name}@undef", a.name)
-        if self.bulk:
+        sched = self._resolve_schedule()
+        if sched is None and self.bulk:
             self._collect_load_regions()
         self.emit_region(self.ssa.region, (), lines, indent)
         rets = []
@@ -474,12 +545,15 @@ class CodeGenerator:
         return GeneratedKernel(
             name=self.fn_name, source=src, fn=glb[self.fn_name],
             in_arrays=in_arrays, scalars=scalars, out_arrays=out_arrays,
-            stats=self.stats, bulk=self.bulk)
+            stats=self.stats, bulk=self.bulk,
+            schedule_mode=self.schedule_mode, schedule=sched)
 
 
 def generate_jax(ssa: SSAResult, extraction: ExtractionResult, *,
                  bulk: bool = True, fn_name: Optional[str] = None,
-                 extra_fns: Optional[Dict[str, Callable]] = None
-                 ) -> GeneratedKernel:
+                 extra_fns: Optional[Dict[str, Callable]] = None,
+                 schedule: Optional[Union[str, ScheduleResult]] = None,
+                 sched_cost_model=None) -> GeneratedKernel:
     return CodeGenerator(ssa, extraction, bulk=bulk, fn_name=fn_name,
-                         extra_fns=extra_fns).generate()
+                         extra_fns=extra_fns, schedule=schedule,
+                         sched_cost_model=sched_cost_model).generate()

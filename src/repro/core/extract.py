@@ -284,7 +284,8 @@ def extract_dag(eg: EGraph, roots, cost_model: Optional[CostModel] = None,
                 *, time_limit_s: float = 5.0, local_search: bool = True,
                 search: str = "beam", beam_width: int = 8,
                 beam_expansions: int = 10_000,
-                hillclimb_evals: int = 100_000) -> ExtractionResult:
+                hillclimb_evals: int = 100_000,
+                coordinated: bool = True) -> ExtractionResult:
     """Extract a minimum-DAG-cost selection covering ``roots``.
 
     Defaults to the roofline-calibrated cost model: the objective is the
@@ -300,6 +301,11 @@ def extract_dag(eg: EGraph, roots, cost_model: Optional[CostModel] = None,
     a polish of the beam winner — so a beam extraction is never worse
     than a hill-climb extraction of the same graph. ``"none"`` (or
     ``local_search=False``) returns the tree fixed point unrefined.
+
+    ``coordinated`` (default on) extends the beam's neighborhood with
+    2-class moves along chosen-DAG edges — a load and its consumer can
+    change together, escaping plateaus where either single swap is
+    strictly worse (ROADMAP's multi-class-move item).
 
     Every pass stops on a deterministic evaluation budget
     (``beam_expansions`` for the beam, ``hillclimb_evals`` for the
@@ -351,6 +357,7 @@ def extract_dag(eg: EGraph, roots, cost_model: Optional[CostModel] = None,
             beam_choice, beam_cost = beam_search(
                 eg, cm, seeds, roots, width=beam_width,
                 deadline=deadline, max_expansions=beam_expansions,
+                coordinated=coordinated,
                 evaluator=evaluator, stats=beam_stats)
             if beam_cost < INF:
                 ch, c = _local_search(

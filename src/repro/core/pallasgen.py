@@ -54,6 +54,8 @@ class PallasKernel:
     scalars: List[str]
     stats: GenStats
     bulk: bool
+    schedule_mode: str = "bulk"
+    schedule: Optional[Any] = None   # ScheduleResult for explicit orders
 
 
 class PallasGenerator(CodeGenerator):
@@ -61,9 +63,11 @@ class PallasGenerator(CodeGenerator):
 
     def __init__(self, ssa: SSAResult, extraction: ExtractionResult, *,
                  bulk: bool = True, fn_name: Optional[str] = None,
-                 reuse_temps: bool = True):
+                 reuse_temps: bool = True, schedule=None,
+                 sched_cost_model=None):
         super().__init__(ssa, extraction, bulk=bulk, fn_name=fn_name,
-                         reuse_temps=reuse_temps)
+                         reuse_temps=reuse_temps, schedule=schedule,
+                         sched_cost_model=sched_cost_model)
 
     def _check_tilable(self):
         def walk(region: Region):
@@ -135,7 +139,8 @@ class PallasGenerator(CodeGenerator):
             self.scope.bind_sym(f"{a}@0", f"{a}_ref")
         for a in out_arrays:
             self.scope.bind_sym(f"{a}@undef", f"{a}_oref")
-        if self.bulk:
+        sched = self._resolve_schedule()
+        if sched is None and self.bulk:
             self._collect_load_regions()
         self.emit_region(self.ssa.region, (), lines, indent)
         body = "\n".join(lines) if lines else "    pass"
@@ -147,7 +152,8 @@ class PallasGenerator(CodeGenerator):
         return PallasKernel(
             name=self.fn_name, source=src, kernel_body=glb[f"{self.fn_name}_body"],
             in_arrays=in_arrays, weight_arrays=[], out_arrays=out_arrays,
-            scalars=scalars, stats=self.stats, bulk=self.bulk)
+            scalars=scalars, stats=self.stats, bulk=self.bulk,
+            schedule_mode=self.schedule_mode, schedule=sched)
 
 
 @dataclasses.dataclass
@@ -249,7 +255,10 @@ def make_tile_op(prog: KernelProgram,
     cfg = config or SaturatorConfig(mode="accsat", cost_model="tpu_v5e")
     sk = saturate_program(prog, cfg)
     pgen = PallasGenerator(sk.ssa, sk.extraction, bulk=cfg.use_bulk,
-                           reuse_temps=cfg.use_cse)
+                           reuse_temps=cfg.use_cse,
+                           schedule=cfg.schedule,
+                           sched_cost_model=cfg.make_schedule_cost_model(
+                               prog))
     pk = pgen.generate_pallas()
 
     jax_fn = sk.kernel.fn

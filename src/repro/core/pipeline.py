@@ -65,6 +65,16 @@ class SaturatorConfig:
     # constants — the default, so committed baselines stay in analytic
     # units. Only meaningful with cost_model="roofline".
     device_profile: Optional[Any] = None
+    # Statement order of the generated kernel (repro.core.schedule):
+    # "source" = loads at use sites, "bulk" = the paper's bulk load
+    # (bit-identical to the pre-PR-5 emitter), "cost" = cost-driven
+    # legal topological order minimizing the schedule-aware latency
+    # objective. None keeps the mode's historical default (bulk for
+    # accsat/cse_bulk, source otherwise), so baselines never drift.
+    schedule: Optional[str] = None
+    # Coordinated multi-class beam moves (load + consumers swapped
+    # together) — escapes plateaus the 1-swap neighborhood cannot leave.
+    beam_coordinated: bool = True
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -75,6 +85,19 @@ class SaturatorConfig:
         if self.search not in SEARCHES:
             raise ValueError(f"search must be one of {SEARCHES}, "
                              f"got {self.search}")
+        from .schedule import SCHEDULE_MODES
+        if self.schedule is not None and \
+                self.schedule not in SCHEDULE_MODES:
+            raise ValueError(f"schedule must be one of {SCHEDULE_MODES}, "
+                             f"got {self.schedule}")
+
+    @property
+    def schedule_mode(self) -> str:
+        """The effective statement order (explicit ``schedule`` wins,
+        else the mode's historical bulk/source behavior)."""
+        if self.schedule is not None:
+            return self.schedule
+        return "bulk" if self.use_bulk else "source"
 
     @property
     def use_sat(self) -> bool:
@@ -107,6 +130,22 @@ class SaturatorConfig:
             return RooflineCostModel(dtype=dtype,
                                      profile=self.device_profile)
         return TPUCostModel() if self.cost_model == "tpu_v5e" else CostModel()
+
+    def make_schedule_cost_model(self, prog: Optional[KernelProgram] = None):
+        """Model pricing the cost-driven schedule search. The roofline
+        objective (calibrated or not) is shared with extraction; flat
+        extraction models can't price a schedule, so a configured
+        ``device_profile`` still drives scheduling through a calibrated
+        roofline model (extraction stays flat — the committed choice is
+        unchanged, only the statement order is optimized), and None
+        falls back to the analytic roofline."""
+        if self.cost_model == "roofline":
+            return self.make_cost_model(prog)
+        if self.device_profile is not None:
+            dtype = getattr(prog, "dtype", None) or "f32"
+            return RooflineCostModel(dtype=dtype,
+                                     profile=self.device_profile)
+        return None
 
 
 @dataclasses.dataclass
@@ -157,6 +196,10 @@ class SaturatedKernel:
             "n_fma": s.n_fma,
             "n_ops": s.n_ops,
             "loads_before_compute": s.loads_before_compute,
+            "schedule": self.kernel.schedule_mode,
+            "schedule_predicted_ns": (
+                self.kernel.schedule.predicted_ns
+                if self.kernel.schedule is not None else None),
             "sat_iterations": self.saturation.iterations
             if self.saturation else 0,
             "sat_nodes": self.saturation.n_nodes if self.saturation else 0,
@@ -202,18 +245,25 @@ def saturate_program(prog: KernelProgram,
                                node_limit=cfg.node_limit,
                                time_limit_s=cfg.time_limit_s)
     roots = ssa.roots()
+    cm = cfg.make_cost_model(prog)
     extraction = extract_dag(
         ssa.egraph, tuple(roots) if roots else (),
-        cost_model=cfg.make_cost_model(prog),
+        cost_model=cm,
         time_limit_s=cfg.extract_time_limit_s,
         local_search=cfg.local_search and cfg.use_cse,
         search=cfg.search, beam_width=cfg.beam_width,
         beam_expansions=cfg.beam_expansions,
-        hillclimb_evals=cfg.hillclimb_evals)
+        hillclimb_evals=cfg.hillclimb_evals,
+        coordinated=cfg.beam_coordinated)
     t1 = time.perf_counter()
+    # the cost scheduler prices statement orders with the same (possibly
+    # calibrated) model extraction minimized — one objective end to end
     gen = CodeGenerator(ssa, extraction, bulk=cfg.use_bulk,
                         extra_fns=extra_fns,
-                        reuse_temps=cfg.use_cse).generate()
+                        reuse_temps=cfg.use_cse,
+                        schedule=cfg.schedule,
+                        sched_cost_model=cfg.make_schedule_cost_model(prog)
+                        ).generate()
     codegen_wall = time.perf_counter() - t1
     # Roofline prediction of the chosen term including root-store write
     # traffic (known only post-codegen), regardless of which cost model

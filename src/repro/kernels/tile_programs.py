@@ -236,8 +236,19 @@ PROGRAMS: Dict[str, callable] = {
 
 
 @functools.lru_cache(maxsize=None)
-def get_tile_op(name: str, mode: str = "accsat") -> TileOp:
-    """Build (and cache) the saturated TileOp for a named program."""
+def get_tile_op(name: str, mode: str = "accsat",
+                schedule: str = None,
+                device_profile: str = None) -> TileOp:
+    """Build (and cache) the saturated TileOp for a named program.
+
+    ``schedule`` picks the statement order of the emitted kernel
+    (``"source" | "bulk" | "cost"``; None keeps the mode's default —
+    bulk for accsat). Extraction stays on the flat TPU model either
+    way, so the *selected term* is identical across schedules; only the
+    emission order moves. ``device_profile`` prices the cost-driven
+    schedule search with a calibrated model (name/path of a profile
+    under ``experiments/device_profiles/``)."""
     cfg = SaturatorConfig(mode=mode, cost_model="tpu_v5e",
-                          tpu_rules=(mode in ("cse_sat", "accsat")))
+                          tpu_rules=(mode in ("cse_sat", "accsat")),
+                          schedule=schedule, device_profile=device_profile)
     return make_tile_op(PROGRAMS[name](), cfg)

@@ -163,6 +163,95 @@ def test_hillclimb_eval_budget_deterministic():
     assert runs[0] == runs[1] == runs[2]
 
 
+# -- coordinated multi-class moves (PR 5 satellite) ---------------------------------
+class _TwoAxisModel:
+    """Toy non-additive objective: cost = max(Σa, Σb) over per-node
+    (a, b) weights keyed by (op, payload). ``node_cost`` is a
+    deliberately misleading additive surrogate so the tree fixed point
+    seeds the search exactly onto the plateau state."""
+
+    def __init__(self, ab, surrogate):
+        self.ab = ab
+        self.surrogate = surrogate
+
+    def node_cost(self, node):
+        return self.surrogate.get((node.op, node.payload), 0.0)
+
+    def aggregate_cost(self, nodes):
+        a = sum(self.ab.get((n.op, n.payload), (0.0, 0.0))[0]
+                for n in nodes)
+        b = sum(self.ab.get((n.op, n.payload), (0.0, 0.0))[1]
+                for n in nodes)
+        return max(a, b)
+
+
+def _plateau_graph(n_pads=8):
+    """Two load-bearing classes, two nodes each, under max(Σa, Σb):
+
+        state (exp, x): max(4, 4) = 4   <- seed (plateau)
+        state (tanh,x): max(0, 7) = 7   <- single swap, strictly worse
+        state (exp, y): max(7, 0) = 7   <- single swap, strictly worse
+        state (tanh,y): max(3, 3) = 3   <- only reachable by moving BOTH
+
+    plus ``n_pads`` >= width free classes with two zero-cost
+    alternatives each: every generation yields at least a full beam of
+    equal-cost plateau siblings, so the strictly-worse single-swap
+    intermediates are always squeezed out of the surviving beam — the
+    1-swap beam is provably stuck at 4 at the default width, while one
+    coordinated (parent, child) move reaches 3 directly.
+    """
+    eg = EGraph()
+    cx = add_expr(eg, ("var", "x"))
+    cy = add_expr(eg, ("var", "y"))
+    ch = eg.find(eg.union(cx, cy))
+    r1 = eg.add(ENode("exp", (ch,)))
+    r2 = eg.add(ENode("tanh", (ch,)))
+    root = eg.find(eg.union(r1, r2))
+    ab = {("exp", None): (4.0, 0.0), ("tanh", None): (0.0, 3.0),
+          ("var", "x"): (0.0, 4.0), ("var", "y"): (3.0, 0.0)}
+    surrogate = {("exp", None): 1.0, ("tanh", None): 10.0,
+                 ("var", "x"): 1.0, ("var", "y"): 10.0}
+    pads = []
+    seed = {eg.find(root): ENode("exp", (eg.find(ch),)),
+            eg.find(ch): ENode("var", (), "x")}
+    for k in range(n_pads):
+        pa = add_expr(eg, ("var", f"pad{k}a"))
+        pb = add_expr(eg, ("var", f"pad{k}b"))
+        pc = eg.find(eg.union(pa, pb))
+        pads.append(pc)
+        seed[pc] = ENode("var", (), f"pad{k}a")
+    eg.rebuild()
+    roots = (eg.find(root),) + tuple(eg.find(p) for p in pads)
+    seed = {eg.find(c): n for c, n in seed.items()}
+    return eg, roots, eg.find(root), eg.find(ch), _TwoAxisModel(
+        ab, surrogate), seed
+
+
+def test_single_swap_beam_stuck_on_plateau():
+    eg, roots, root, ch, cm, seed = _plateau_graph()
+    _, cost = beam_search(eg, cm, [seed], roots, width=8,
+                          coordinated=False)
+    assert cost == pytest.approx(4.0)
+
+
+def test_coordinated_move_escapes_plateau():
+    eg, roots, root, ch, cm, seed = _plateau_graph()
+    stats = BeamStats()
+    choice, cost = beam_search(eg, cm, [seed], roots, width=8,
+                               coordinated=True, stats=stats)
+    assert cost == pytest.approx(3.0)
+    assert stats.coordinated_expanded > 0
+    assert choice[root].op == "tanh"
+    assert choice[ch].payload == "y"
+
+
+def test_extract_dag_with_coordinated_moves_finds_optimum():
+    eg, roots, root, ch, cm, _ = _plateau_graph()
+    res = extract_dag(eg, roots, cost_model=cm, search="beam",
+                      coordinated=True)
+    assert res.dag_cost == pytest.approx(3.0)
+
+
 # -- unextractable-root diagnostics (PR 3 bugfix) -----------------------------------
 def _cyclic_graph():
     """Two classes whose only nodes reference each other — extraction of

@@ -1,0 +1,326 @@
+"""Schedule-aware codegen (PR 5): legality fuzz, named-order properties,
+the cost-driven scheduler, and the schedule-aware calibration formula.
+
+The legality property is the load-bearing one: any *legal topological
+order* of the dependence DAG (loads/stores never crossing a dependence
+or store-store/WAR hazard) must emit a kernel whose outputs are
+bit-identical to the bulk-ordered kernel — reordering independent
+statements never changes the arithmetic DAG — and numerically match the
+reference interpreter.
+"""
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.analysis import (CalibrationParams, KernelFeatures, LatencyModel,
+                            RooflineCostModel, fit_params, predict_ns)
+from repro.analysis.latency import ScheduleEvent
+from repro.core import (KernelProgram, SaturatorConfig, c, compute_schedule,
+                        is_legal_order, random_topological_order,
+                        run_reference, saturate_program, v)
+from repro.core.codegen import CodeGenerator
+from repro.core.schedule import SCHEDULE_MODES
+from repro.kernels.tile_programs import PROGRAMS
+
+TILE_NAMES = ("rmsnorm", "adamw", "layernorm", "ssd_gate", "sgd_momentum")
+
+
+def _tile_inputs(prog, seed=0):
+    from repro.analysis import TILE_SHAPE
+    rng = np.random.default_rng(seed)
+    arrays = []
+    for spec in prog.arrays.values():
+        shape = getattr(spec, "shape", None) or TILE_SHAPE
+        shape = tuple(TILE_SHAPE[i] if d is None else int(d)
+                      for i, d in enumerate(shape))
+        arrays.append(rng.uniform(0.1, 1.0, size=shape).astype(np.float32))
+    scalars = {s: 0.5 for s in prog.scalars}
+    return arrays, scalars
+
+
+def _run_jax_kernel(sk, kernel, prog):
+    arrays, scalars = _tile_inputs(prog)
+    args = [jnp.asarray(a) for a in arrays] \
+        + [scalars[s] for s in kernel.scalars]
+    out = kernel.fn(*args)
+    return [np.asarray(o) for o in out]
+
+
+def _randomized(sr, rng):
+    regions = {p: dataclasses.replace(
+        rs, order=random_topological_order(rs.units, rng))
+        for p, rs in sr.regions.items()}
+    return dataclasses.replace(sr, regions=regions)
+
+
+# -- legality fuzz: random legal topological orders -------------------------
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_random_legal_orders_bit_identical(seed):
+    """Any random legal topological order of the dependence DAG emits a
+    kernel bit-identical to the bulk-scheduled one (and both match the
+    reference interpreter numerically)."""
+    rng = np.random.default_rng(seed)
+    name = TILE_NAMES[int(rng.integers(len(TILE_NAMES)))]
+    sk = saturate_program(PROGRAMS[name](), SaturatorConfig(mode="accsat"))
+    ref_out = _run_jax_kernel(sk, sk.kernel, sk.ssa.prog)
+    sr = compute_schedule(sk.ssa, dict(sk.extraction.choice), mode="cost")
+    for rs in sr.regions.values():
+        assert is_legal_order(rs.units, rs.order)
+    rnd = _randomized(sr, rng)
+    for rs in rnd.regions.values():
+        assert is_legal_order(rs.units, rs.order)
+    gen = CodeGenerator(sk.ssa, sk.extraction, schedule=rnd)
+    k = gen.generate()
+    out = _run_jax_kernel(sk, k, sk.ssa.prog)
+    for a, b in zip(ref_out, out):
+        assert (a == b).all(), "schedule changed kernel outputs"
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_random_orders_match_reference_interpreter(seed):
+    """Randomly ordered kernels still agree with the reference
+    interpreter (float32 numerics, so allclose not bitwise vs numpy)."""
+    rng = np.random.default_rng(seed)
+    name = TILE_NAMES[int(rng.integers(len(TILE_NAMES)))]
+    prog = PROGRAMS[name]()
+    sk = saturate_program(prog, SaturatorConfig(mode="accsat"))
+    sr = compute_schedule(sk.ssa, dict(sk.extraction.choice), mode="cost")
+    rnd = _randomized(sr, rng)
+    k = CodeGenerator(sk.ssa, sk.extraction, schedule=rnd).generate()
+    arrays, scalars = _tile_inputs(prog)
+    inputs = {}
+    ai = iter(arrays)
+    for spec in prog.arrays.values():
+        if spec.role in ("in", "inout"):
+            inputs[spec.name] = next(ai)
+        else:
+            inputs[spec.name] = np.zeros_like(arrays[0])
+    inputs.update(scalars)
+    ref = run_reference(prog, {k_: (v_.copy() if isinstance(v_, np.ndarray)
+                                    else v_) for k_, v_ in inputs.items()})
+    args = [jnp.asarray(inputs[n]) for n in k.in_arrays] \
+        + [scalars[s] for s in k.scalars]
+    out = k.fn(*args)
+    for o, name_ in zip(out, k.out_arrays):
+        # float32 kernel vs the numpy interpreter: allclose, not bitwise
+        np.testing.assert_allclose(np.asarray(o), ref[name_],
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_loop_kernel_random_orders(rng):
+    """Legality fuzz through a loop region (loads, a loop unit, and
+    stores that must respect the loop's version chain)."""
+    p = KernelProgram("loopy")
+    x = p.array_in("x")
+    p.array_out("o")
+    n = p.scalar("n")
+    i = p.scalar("i")
+    p.let("acc", c(0.0))
+    with p.for_("l", 0, v("n")):
+        p.let("acc", v("acc") + x[v("l")] * x[v("l")])
+    p.store("o", v("acc") * x[v("i")], v("i"))
+    sk = saturate_program(p, SaturatorConfig(mode="accsat"))
+    X = rng.normal(size=(6,)).astype(np.float32)
+    base_out = np.asarray(sk(jnp.asarray(X), jnp.zeros(6, np.float32),
+                             6, 2)[0])
+    sr = compute_schedule(sk.ssa, dict(sk.extraction.choice), mode="cost")
+    for seed in range(5):
+        rnd = _randomized(sr, np.random.default_rng(seed))
+        k = CodeGenerator(sk.ssa, sk.extraction, schedule=rnd).generate()
+        out = np.asarray(k.fn(jnp.asarray(X), jnp.zeros(6, np.float32),
+                              6, 2)[0])
+        assert (out == base_out).all()
+
+
+# -- named orders -----------------------------------------------------------
+@pytest.mark.parametrize("name", TILE_NAMES)
+def test_named_orders_are_legal_and_ranked(name):
+    """cost <= bulk <= source in predicted schedule latency (analytic
+    model; the bench-regression CI leg enforces the same invariant)."""
+    sk = saturate_program(PROGRAMS[name](), SaturatorConfig(mode="accsat"))
+    sr = compute_schedule(sk.ssa, dict(sk.extraction.choice), mode="cost")
+    by = sr.predicted_by_mode
+    assert by["cost"] <= by["bulk"] + 1e-9
+    assert by["bulk"] <= by["source"] + 1e-9
+    for mode in SCHEDULE_MODES:
+        sr_m = compute_schedule(sk.ssa, dict(sk.extraction.choice),
+                                mode=mode)
+        for rs in sr_m.regions.values():
+            assert is_legal_order(rs.units, rs.order)
+
+
+def test_bulk_schedule_bit_identical_sources():
+    """schedule="bulk" reproduces the legacy bulk emitter's sources
+    bit-for-bit (the paper-baseline modes never drift)."""
+    for name in ("rmsnorm", "adamw", "softmax"):
+        legacy = saturate_program(PROGRAMS[name](),
+                                  SaturatorConfig(mode="accsat"))
+        sched = saturate_program(PROGRAMS[name](),
+                                 SaturatorConfig(mode="accsat",
+                                                 schedule="bulk"))
+        assert legacy.kernel.source == sched.kernel.source
+        assert sched.kernel.schedule_mode == "bulk"
+
+
+def test_source_schedule_matches_nonbulk_legacy():
+    """schedule="source" under accsat equals the legacy bulk=False
+    emission (loads at use sites)."""
+    sk = saturate_program(PROGRAMS["rmsnorm"](),
+                          SaturatorConfig(mode="accsat",
+                                          schedule="source"))
+    gen = CodeGenerator(sk.ssa, sk.extraction, bulk=False)
+    assert sk.kernel.source == gen.generate().source
+
+
+def test_cost_schedule_outputs_match_bulk():
+    for name in TILE_NAMES:
+        bulk = saturate_program(PROGRAMS[name](),
+                                SaturatorConfig(mode="accsat"))
+        cost = saturate_program(PROGRAMS[name](),
+                                SaturatorConfig(mode="accsat",
+                                                schedule="cost"))
+        a = _run_jax_kernel(bulk, bulk.kernel, bulk.ssa.prog)
+        b = _run_jax_kernel(cost, cost.kernel, cost.ssa.prog)
+        for x, y in zip(a, b):
+            assert (x == y).all()
+        assert cost.kernel.schedule is not None
+        assert cost.report()["schedule"] == "cost"
+
+
+def test_invalid_schedule_mode_rejected():
+    with pytest.raises(ValueError, match="schedule"):
+        SaturatorConfig(mode="accsat", schedule="random")
+    sk = saturate_program(PROGRAMS["rmsnorm"](), SaturatorConfig())
+    with pytest.raises(ValueError, match="schedule"):
+        CodeGenerator(sk.ssa, sk.extraction, schedule="zigzag")
+
+
+# -- the schedule-aware objective -------------------------------------------
+def test_schedule_ns_overlap_is_position_dependent():
+    """A load issued far before its consumer hides its transfer; the
+    same load issued right before it stalls."""
+    lm = LatencyModel()
+    load = ScheduleEvent(kind="load", issue_ns=0.0, mem_ns=10.0,
+                         bytes_live=4096.0, first_use=2, last_use=2)
+    comp = ScheduleEvent(kind="compute", issue_ns=20.0)
+    use = ScheduleEvent(kind="compute", issue_ns=1.0)
+    hidden = lm.schedule_ns([load, comp, use])
+    load_late = dataclasses.replace(load, first_use=1)
+    exposed = lm.schedule_ns([comp, load_late, use])
+    assert hidden["exposed_mem_ns"] == pytest.approx(0.0)
+    assert exposed["exposed_mem_ns"] == pytest.approx(10.0)
+    assert exposed["latency_ns"] > hidden["latency_ns"]
+
+
+def test_schedule_ns_vmem_pressure_term():
+    lm = LatencyModel(vmem_pressure_coeff=1.0)
+    ev = [ScheduleEvent(kind="load", issue_ns=0.0, mem_ns=1.0,
+                        bytes_live=2048.0, first_use=2, last_use=2),
+          ScheduleEvent(kind="load", issue_ns=0.0, mem_ns=1.0,
+                        bytes_live=2048.0, first_use=2, last_use=2),
+          ScheduleEvent(kind="compute", issue_ns=1.0)]
+    over = lm.schedule_ns(ev, vmem_budget_bytes=1024)
+    under = lm.schedule_ns(ev, vmem_budget_bytes=1 << 20)
+    assert over["peak_live_bytes"] == pytest.approx(4096.0)
+    assert over["pressure_ns"] > 0.0
+    assert under["pressure_ns"] == 0.0
+
+
+def test_pressure_drives_scheduler_to_sink_loads():
+    """With a tiny VMEM budget and a live pressure coefficient, the cost
+    scheduler reduces the peak live set vs the bulk order (loads sink
+    toward their consumers)."""
+    lm = LatencyModel(vmem_pressure_coeff=10.0, overlap_efficiency=1.0)
+    sk = saturate_program(PROGRAMS["adamw"](), SaturatorConfig(mode="accsat"))
+    cm = RooflineCostModel(latency=lm, egraph=sk.ssa.egraph)
+    sr = compute_schedule(sk.ssa, dict(sk.extraction.choice), mode="cost",
+                          cost_model=cm, vmem_budget_bytes=4096)
+    bulk = compute_schedule(sk.ssa, dict(sk.extraction.choice), mode="bulk",
+                            cost_model=cm, vmem_budget_bytes=4096)
+    assert sr.peak_live_bytes < bulk.peak_live_bytes
+
+
+def test_latency_ns_overlap_efficiency_reduces_to_pr4():
+    """eff=0 is bit-identical to the PR-4 aggregate formula; eff>0 can
+    only lower the prediction (memory gets hidden, never added)."""
+    from repro.analysis import OpStats
+    st_ = OpStats(flops=1024.0, bytes_read=8192.0, vpu_passes=4.0)
+    base = LatencyModel()
+    zero = LatencyModel(overlap_efficiency=0.0)
+    some = LatencyModel(overlap_efficiency=0.5)
+    assert zero.latency_ns(st_) == base.latency_ns(st_)
+    assert some.latency_ns(st_) <= base.latency_ns(st_)
+
+
+# -- calibration plumbing ---------------------------------------------------
+def test_kernel_features_schedule_round_trip():
+    feat = KernelFeatures(
+        kernel="k", class_passes={"simple": 3.0}, hbm_bytes=8192.0,
+        sched_loads=((4096.0, 2.0, 1.0), (4096.0, 0.0, 0.0)),
+        peak_live_bytes=8192.0, sched_mode="cost")
+    back = KernelFeatures.from_dict(feat.to_dict())
+    assert back == feat
+
+
+def test_predict_ns_default_params_unchanged_by_sched_features():
+    """Without a fitted overlap_efficiency the schedule features are
+    inert — PR-4 profiles and predictions stay bit-identical."""
+    plain = KernelFeatures(kernel="k", class_passes={"simple": 4.0},
+                           hbm_bytes=16384.0)
+    sched = dataclasses.replace(plain,
+                                sched_loads=((8192.0, 2.0, 0.0),),
+                                peak_live_bytes=8192.0)
+    p = CalibrationParams()
+    assert predict_ns(plain, p) == predict_ns(sched, p)
+
+
+def test_predict_ns_overlap_uses_per_load_windows():
+    feat = KernelFeatures(kernel="k", class_passes={"simple": 8.0},
+                          hbm_bytes=8192.0,
+                          sched_loads=((8192.0, 8.0, 0.0),))
+    no_gap = dataclasses.replace(feat, sched_loads=((8192.0, 0.0, 0.0),))
+    p = CalibrationParams(overlap_efficiency=1.0)
+    assert predict_ns(feat, p) < predict_ns(no_gap, p)
+
+
+def test_fit_recovers_overlap_efficiency():
+    """Synthetic ground truth: timings generated with a known
+    overlap_efficiency are recovered by the fitter (schedule features
+    present -> the eff axis is swept)."""
+    truth = CalibrationParams(overlap_slack_compute=0.0,
+                              overlap_slack_memory=0.0,
+                              overlap_efficiency=0.6)
+    feats = []
+    rng = np.random.default_rng(0)
+    for i in range(8):
+        nloads = int(rng.integers(1, 4))
+        loads = tuple((float(rng.integers(1, 3) * 4096),
+                       float(rng.integers(0, 12)), 0.0)
+                      for _ in range(nloads))
+        feats.append(KernelFeatures(
+            kernel=f"k{i}",
+            class_passes={"simple": float(rng.integers(1, 10)),
+                          "transcendental": float(rng.integers(0, 3) * 8)},
+            hbm_bytes=sum(b for b, _, _ in loads) + 4096.0,
+            sched_loads=loads))
+    meas = [predict_ns(f, truth) for f in feats]
+    params, loss, _ = fit_params(feats, meas, fit_base=False)
+    assert loss < 1e-3
+    assert params.overlap_efficiency == pytest.approx(0.6, abs=0.15)
+
+
+def test_schedule_report_fields():
+    sk = saturate_program(PROGRAMS["rmsnorm"](),
+                          SaturatorConfig(mode="accsat", schedule="cost"))
+    rep = sk.report()
+    assert rep["schedule"] == "cost"
+    assert rep["schedule_predicted_ns"] is not None
+    windows = sk.kernel.schedule.load_windows()
+    assert len(windows) == sk.kernel.stats.n_loads
+    for nbytes, gap_passes, gap_loads in windows:
+        assert nbytes > 0 and gap_passes >= 0 and gap_loads >= 0
