@@ -80,11 +80,14 @@ PROFILE_DIR = ROOT / "experiments" / "device_profiles"
 CURRENT = OUT_ROOT / "bench_current.json"
 BEAM_STATS = OUT_ROOT / "beam_stats.json"
 BENCH5 = ROOT / "BENCH_5.json"
+BENCH6 = ROOT / "BENCH_6.json"
 SCHED_PROFILE = "cpu_pallas_interpret_sched"   # PR-5 schedule-aware fit
 BASE_PROFILE = "cpu_pallas_interpret"          # PR-4 bulk-order fit
 
 BASELINE_SCHEMA_VERSION = 3   # 2 = PR 4 (no schedule block); 1 = PR 3
 BENCH5_SCHEMA_VERSION = 1
+BENCH6_SCHEMA_VERSION = 1
+BENCH6_REPLAY_FLOOR = 10.0   # committed cold/replay saturation speedup
 TOLERANCE_PCT = 2.0
 ABS_EPS = 1e-6          # ignore float dust on tiny costs
 BEAM_EPS = 1e-6
@@ -299,6 +302,60 @@ def write_bench5(metrics) -> None:
     print(f"wrote {BENCH5} ({len(kernels)} kernels)")
 
 
+def check_bench6() -> list:
+    """Drift check for the committed PR-6 serve-decode cache report.
+
+    Wall clocks are machine-dependent, so unlike the BENCH_5 leg this
+    does not recompute anything: it validates that the committed report
+    parses, matches the expected schema, and that its invariant facts
+    hold — a fully-warm second boot (hit rate 1.0, no warm-boot
+    misses), positive throughputs, and a cold/replay saturation-time
+    speedup at or above the floor the cache exists to deliver."""
+    if not BENCH6.exists():
+        return [f"missing {BENCH6}; regenerate with `PYTHONPATH=src "
+                "python examples/serve_decode.py --out BENCH_6.json` "
+                "and commit it"]
+    try:
+        doc = json.loads(BENCH6.read_text())
+    except json.JSONDecodeError as e:
+        return [f"{BENCH6.name}: invalid JSON: {e}"]
+    ver = doc.get("schema_version")
+    if ver != BENCH6_SCHEMA_VERSION:
+        return [f"{BENCH6.name}: schema_version {ver!r}, expected "
+                f"{BENCH6_SCHEMA_VERSION} — regenerate and commit"]
+    failures = []
+    for sec in ("saturated", "reference"):
+        tps = (doc.get(sec) or {}).get("tokens_per_s", 0)
+        if not tps or tps <= 0:
+            failures.append(f"{BENCH6.name}: {sec}.tokens_per_s missing "
+                            "or non-positive")
+    cache = doc.get("cache")
+    if not isinstance(cache, dict):
+        failures.append(f"{BENCH6.name}: no cache section (was it "
+                        "generated with --no-cache?)")
+        return failures
+    cold, warm = cache.get("cold") or {}, cache.get("warm") or {}
+    if cold.get("misses", 0) < 1 or cold.get("stores", 0) < 1:
+        failures.append(f"{BENCH6.name}: cold boot recorded no cache "
+                        "misses/stores — the cache was never exercised")
+    if warm.get("hit_rate") != 1.0 or warm.get("misses", 1) != 0:
+        failures.append(
+            f"{BENCH6.name}: warm boot not fully served from cache "
+            f"(hit_rate={warm.get('hit_rate')!r}, "
+            f"misses={warm.get('misses')!r})")
+    speedup = cache.get("replay_speedup", 0)
+    if not speedup or speedup < BENCH6_REPLAY_FLOOR:
+        failures.append(
+            f"{BENCH6.name}: committed replay_speedup {speedup!r} below "
+            f"the {BENCH6_REPLAY_FLOOR:.0f}x floor")
+    if not failures:
+        print(f"  BENCH_6 ok: warm hit_rate=1.0, replay "
+              f"{speedup:.0f}x, saturated "
+              f"{doc['saturated']['tokens_per_s']:.1f} tok/s vs ref "
+              f"{doc['reference']['tokens_per_s']:.1f} tok/s")
+    return failures
+
+
 def check_calibration() -> list:
     """The predicted-vs-measured leg of the gate: every committed device
     profile must still rank kernels faithfully under the current model
@@ -376,6 +433,8 @@ def main() -> int:
     failures += check_schedule_measured()
     print("calibrated predicted-vs-measured check:")
     failures += check_calibration()
+    print("BENCH_6 serve-decode cache report:")
+    failures += check_bench6()
     if failures:
         print(f"\nFAIL: {len(failures)} regression(s) "
               f"(tolerance {TOLERANCE_PCT}%):", file=sys.stderr)

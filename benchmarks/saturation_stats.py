@@ -104,8 +104,12 @@ def run_saturation_stats(compare_hillclimb: bool = True,
         rows.append(row)
     ssa_ms = [r["ssa_codegen_ms"] for r in rows]
     sat_s = [r["saturation_s"] for r in rows]
+    from repro.core.telemetry import telemetry
     return {
         "rows": rows,
+        # PR-6 runtime counters: persistent-cache hits/misses/warm starts
+        # and per-primitive jaxpr-bridge fallbacks observed this process
+        "telemetry": telemetry().snapshot(),
         "ssa_codegen_ms_mean": statistics.mean(ssa_ms),
         "ssa_codegen_ms_stdev": statistics.pstdev(ssa_ms),
         "ssa_codegen_ms_range": (min(ssa_ms), max(ssa_ms)),

@@ -1,30 +1,149 @@
-"""Serving example: batched requests with continuous batching over the
-Mamba2 (SSD) architecture — prefill builds the recurrent state, decode
-advances all active sequences one token per tick.
+"""Serving example + PR-6 benchmark: decode throughput with the
+persistent saturation cache.
 
-Run:  PYTHONPATH=src python examples/serve_decode.py
+Batched requests run with continuous batching over the Mamba2 (SSD)
+architecture — prefill builds the recurrent state, decode advances all
+active sequences one token per tick. On top of the original demo this
+script measures the numbers BENCH_6.json commits:
+
+  * decode tokens/sec with saturation ON (the saturated tile kernels the
+    models dispatch through repro.kernels.ops) vs OFF (the unsaturated
+    reference oracle, ``ops.set_impl("ref")``);
+  * persistent-cache behaviour: a cold pass populates ``--cache-dir``,
+    a second pass replays from disk — hit rate and cold-vs-replay
+    saturation wall time come from repro.core.telemetry.
+
+Flags:
+  --cache-dir DIR   saturation cache directory (default: a fresh temp
+                    dir, so the cold/warm phases are well-defined)
+  --no-cache        disable the on-disk cache entirely (the cache
+                    section of the report is then omitted)
+  --out PATH        write the measured report as JSON (CI commits this
+                    as BENCH_6.json)
+
+Run:  PYTHONPATH=src python examples/serve_decode.py --out BENCH_6.json
 """
+import argparse
+import json
+import tempfile
+import time
+
+import jax
 import numpy as np
 
+from repro.core.telemetry import reset_telemetry, telemetry
+from repro.kernels import ops
+from repro.kernels.tile_programs import get_tile_op
 from repro.launch.serve import Request, Server
 
 
-def main():
-    srv = Server("mamba2-1.3b", smoke=True, max_batch=4)
-    rng = np.random.default_rng(0)
-    requests = [
-        Request(rid=i,
-                prompt=rng.integers(1, srv.cfg.vocab,
-                                    size=12 + 3 * (i % 3)).astype(np.int32),
-                max_new=10)
-        for i in range(7)
-    ]
-    out = srv.generate(requests)
+def _requests(cfg, n, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(1, cfg.vocab,
+                                        size=12 + 3 * (i % 3)).astype(
+                                            np.int32),
+                    max_new=max_new)
+            for i in range(n)]
+
+
+def _timed_generate(srv, reqs):
+    """Run one warmup batch (jit compile) then time a full generate."""
+    srv.generate(_requests(srv.cfg, len(reqs), reqs[0].max_new, seed=1))
+    tokens_before = srv.metrics["tokens"]
+    t0 = time.perf_counter()
+    out = srv.generate(reqs)
+    dt = time.perf_counter() - t0
+    tokens = srv.metrics["tokens"] - tokens_before
+    return out, tokens, dt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-1.3b")
+    ap.add_argument("--requests", type=int, default=7)
+    ap.add_argument("--max-new", type=int, default=10)
+    ap.add_argument("--cache-dir", default=None,
+                    help="saturation cache dir (default: fresh temp dir)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the persistent saturation cache")
+    ap.add_argument("--out", default=None,
+                    help="write the benchmark report JSON here")
+    args = ap.parse_args(argv)
+
+    cache_dir = None if args.no_cache else (
+        args.cache_dir or tempfile.mkdtemp(prefix="repro_sat_cache_"))
+    report = {"schema_version": 1, "pr": 6,
+              "bench": "serve_decode", "arch": args.arch,
+              "backend": jax.default_backend(),
+              "requests": args.requests, "max_new": args.max_new,
+              "cache_dir": cache_dir}
+
+    # -- phase 1: cold boot — saturation searches run, cache populates --
+    reset_telemetry()
+    srv = Server(args.arch, smoke=True, max_batch=4, cache_dir=cache_dir)
+    out, tokens, dt = _timed_generate(
+        srv, _requests(srv.cfg, args.requests, args.max_new))
     for rid in sorted(out):
         print(f"req{rid}: {out[rid]}")
-    m = srv.metrics
-    print(f"{len(out)} requests, {m['tokens']} tokens, "
-          f"{m['prefills']} prefill batches, {m['decode_ticks']} ticks")
+    cold = telemetry().snapshot()
+    report["saturated"] = {"tokens": tokens, "wall_s": dt,
+                           "tokens_per_s": tokens / dt}
+    print(f"saturation ON : {tokens} tokens in {dt:.2f}s "
+          f"({tokens / dt:.1f} tok/s)")
+
+    if cache_dir is not None:
+        # -- phase 2: warm boot — drop the in-process memo so every tile
+        # op is rebuilt, now replayed from the on-disk entries ----------
+        get_tile_op.cache_clear()
+        reset_telemetry()
+        srv2 = Server(args.arch, smoke=True, max_batch=4,
+                      cache_dir=cache_dir)
+        _, tokens2, dt2 = _timed_generate(
+            srv2, _requests(srv2.cfg, args.requests, args.max_new))
+        warm = telemetry().snapshot()
+        replay_speedup = (cold["cold_wall_s"] / warm["hit_wall_s"]
+                          if warm["hit_wall_s"] > 0 else float("inf"))
+        report["cache"] = {
+            "cold": {"misses": cold["cache_misses"],
+                     "stores": cold["cache_stores"],
+                     "saturation_wall_s": cold["cold_wall_s"]},
+            "warm": {"hits": warm["cache_hits"],
+                     "misses": warm["cache_misses"],
+                     "hit_rate": warm["cache_hit_rate"],
+                     "saturation_wall_s": warm["hit_wall_s"],
+                     "tokens_per_s": tokens2 / dt2},
+            "replay_speedup": replay_speedup,
+        }
+        print(f"cache: cold misses={cold['cache_misses']} "
+              f"({cold['cold_wall_s']:.2f}s search) -> warm "
+              f"hits={warm['cache_hits']} hit_rate="
+              f"{warm['cache_hit_rate']:.2f} "
+              f"({warm['hit_wall_s']:.3f}s replay, "
+              f"{replay_speedup:.0f}x)")
+
+    # -- phase 3: saturation OFF — unsaturated reference kernels --------
+    ops.set_impl("ref")
+    try:
+        srv3 = Server(args.arch, smoke=True, max_batch=4)
+        _, tokens3, dt3 = _timed_generate(
+            srv3, _requests(srv3.cfg, args.requests, args.max_new))
+    finally:
+        ops.set_impl(None)
+    report["reference"] = {"tokens": tokens3, "wall_s": dt3,
+                           "tokens_per_s": tokens3 / dt3}
+    report["decode_speedup_vs_ref"] = (
+        report["saturated"]["tokens_per_s"]
+        / report["reference"]["tokens_per_s"])
+    print(f"saturation OFF: {tokens3} tokens in {dt3:.2f}s "
+          f"({tokens3 / dt3:.1f} tok/s) -> saturated is "
+          f"{report['decode_speedup_vs_ref']:.2f}x")
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, sort_keys=True)
+        print(f"wrote {args.out}")
+    return report
 
 
 if __name__ == "__main__":

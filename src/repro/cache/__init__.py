@@ -1,0 +1,36 @@
+"""Persistent, content-addressed saturation cache (PR 6).
+
+Equality saturation pays off only when its cost is amortized: a serving
+process should pay beam-search cost once per kernel shape — across the
+fleet and across boots — not once per process. This package persists
+the *committed result* of ``saturate_program`` (extraction choice,
+schedule order, predicted cost) keyed by content fingerprints of the
+program, rule set, search configuration, and operand shapes:
+
+* exact hit  → the choice is grafted back into a fresh SSA e-graph and
+  the kernel re-emitted with the cached statement order: **no
+  saturation, no beam search, no schedule search**, bit-identical
+  sources to the cold path;
+* warm hit (same kernel, different shapes) → the cached choice seeds
+  the beam and the cached order seeds the schedule search;
+* anything invalid → cold path (correctness never depends on an entry).
+
+Enable per-config (``SaturatorConfig(cache_dir=...)``), process-wide
+for the tile-op hot path (``repro.kernels.ops.set_saturation_cache``),
+or via the ``REPRO_SAT_CACHE`` environment variable. Telemetry lands in
+``repro.core.telemetry``.
+"""
+from .keys import (EXTRACTOR_VERSION, FORMAT_VERSION, CacheKey,
+                   cache_key_for, config_fingerprint, program_fingerprint,
+                   rules_fingerprint, shapes_fingerprint)
+from .serialize import (CacheInvalid, choice_to_doc, graft_choice,
+                        orders_from_doc, schedule_to_doc)
+from .store import SaturationCache, make_entry
+
+__all__ = [
+    "EXTRACTOR_VERSION", "FORMAT_VERSION", "CacheKey", "CacheInvalid",
+    "SaturationCache", "cache_key_for", "choice_to_doc",
+    "config_fingerprint", "graft_choice", "make_entry", "orders_from_doc",
+    "program_fingerprint", "rules_fingerprint", "schedule_to_doc",
+    "shapes_fingerprint",
+]

@@ -1,0 +1,149 @@
+"""On-disk content-addressed store for saturation results.
+
+Layout (all names content-derived, see :mod:`repro.cache.keys`)::
+
+    <root>/<kernel>/<warm_key[:24]>/<exact_key[:24]>.json
+
+One JSON file per (program, shapes, config) — the committed extraction
+choice, schedule order, and predicted cost. A lookup first tries the
+exact file (→ ``"hit"``: replay, no search); otherwise any sibling in
+the same warm directory is the same kernel under the same rules/config
+with different shapes (→ ``"warm"``: seed the searches from it).
+
+Robustness contract (exercised by ``tests/test_saturation_cache.py``):
+
+* writes go to a temp file in the same directory and land via
+  ``os.replace`` — atomic on POSIX, so concurrent writers can't clobber
+  each other or expose torn entries;
+* corrupt / truncated / version-mismatched entries are *ignored* (and
+  counted in telemetry), never trusted — the caller falls back to the
+  cold path;
+* the full keys are embedded in each entry and re-validated on load, so
+  a truncated-digest filename collision degrades to a miss.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+import uuid
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+from repro.core.telemetry import telemetry
+
+from .keys import EXTRACTOR_VERSION, FORMAT_VERSION, CacheKey
+from .serialize import CacheInvalid
+
+_DIGEST_CHARS = 24
+
+
+class SaturationCache:
+    def __init__(self, root):
+        self.root = Path(root)
+
+    # -- paths --------------------------------------------------------------
+    def _warm_dir(self, key: CacheKey) -> Path:
+        return self.root / key.kernel / key.warm_key[:_DIGEST_CHARS]
+
+    def _entry_path(self, key: CacheKey) -> Path:
+        return self._warm_dir(key) / \
+            f"{key.exact_key[:_DIGEST_CHARS]}.json"
+
+    # -- load/validate -------------------------------------------------------
+    def _load(self, path: Path, key: CacheKey, *, exact: bool
+              ) -> Dict[str, Any]:
+        try:
+            with open(path, encoding="utf-8") as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise CacheInvalid(f"unreadable entry {path.name}: {e}") from e
+        if not isinstance(doc, dict):
+            raise CacheInvalid(f"entry {path.name} is not an object")
+        if doc.get("format") != FORMAT_VERSION:
+            raise CacheInvalid(f"format {doc.get('format')!r} != "
+                               f"{FORMAT_VERSION}")
+        if doc.get("extractor_version") != EXTRACTOR_VERSION:
+            raise CacheInvalid(
+                f"extractor version {doc.get('extractor_version')!r} != "
+                f"{EXTRACTOR_VERSION}")
+        dk = doc.get("key", {})
+        if dk.get("warm") != key.warm_key:
+            raise CacheInvalid("warm-key mismatch (stale rules/config "
+                               "or digest collision)")
+        if exact and dk.get("exact") != key.exact_key:
+            raise CacheInvalid("exact-key mismatch")
+        if "choice" not in doc:
+            raise CacheInvalid("entry has no choice")
+        return doc
+
+    def lookup(self, key: CacheKey
+               ) -> Tuple[Optional[Dict[str, Any]], str]:
+        """Returns ``(entry, status)`` with status in
+        ``{"hit", "warm", "miss"}``; entry is None on a miss."""
+        exact = self._entry_path(key)
+        if exact.is_file():
+            try:
+                return self._load(exact, key, exact=True), "hit"
+            except CacheInvalid as e:
+                telemetry().record_invalid(key.kernel, str(e))
+        warm_dir = self._warm_dir(key)
+        if warm_dir.is_dir():
+            for path in sorted(warm_dir.glob("*.json")):
+                if path == exact:
+                    continue
+                try:
+                    return self._load(path, key, exact=False), "warm"
+                except CacheInvalid as e:
+                    telemetry().record_invalid(key.kernel, str(e))
+        return None, "miss"
+
+    # -- store ---------------------------------------------------------------
+    def put(self, key: CacheKey, entry: Dict[str, Any]) -> bool:
+        """Atomically persist ``entry``; False on filesystem trouble
+        (caching is best-effort, never fatal)."""
+        path = self._entry_path(key)
+        tmp = path.with_name(
+            f".{path.stem}.{os.getpid()}.{uuid.uuid4().hex[:8]}.tmp")
+        try:
+            path.parent.mkdir(parents=True, exist_ok=True)
+            with open(tmp, "w", encoding="utf-8") as f:
+                json.dump(entry, f, sort_keys=True, separators=(",", ":"))
+            os.replace(tmp, path)   # atomic: readers see old or new, whole
+        except OSError:
+            try:
+                tmp.unlink(missing_ok=True)
+            except OSError:
+                pass
+            return False
+        telemetry().record_store(key.kernel)
+        return True
+
+    def stats(self) -> Dict[str, int]:
+        entries = 0
+        kernels = set()
+        if self.root.is_dir():
+            for p in self.root.rglob("*.json"):
+                entries += 1
+                kernels.add(p.parts[len(self.root.parts)])
+        return {"entries": entries, "kernels": len(kernels)}
+
+
+def make_entry(key: CacheKey, *, choice_doc: Dict[str, Any],
+               schedule_doc: Optional[Dict[str, Any]],
+               predicted: Optional[Dict[str, Any]],
+               dag_cost: float, report: Dict[str, Any]
+               ) -> Dict[str, Any]:
+    """Assemble one versioned on-disk entry."""
+    return {
+        "format": FORMAT_VERSION,
+        "extractor_version": EXTRACTOR_VERSION,
+        "key": {"warm": key.warm_key, "exact": key.exact_key,
+                "components": dict(key.components)},
+        "choice": choice_doc,
+        "schedule": schedule_doc,
+        "predicted": predicted,
+        "dag_cost": dag_cost,
+        "cold_report": report,
+        "created_unix": time.time(),
+    }

@@ -14,15 +14,18 @@ from .extract import (ExtractionResult, extract_dag, extract_exact,
 from .ir import ENode
 from .jaxpr_bridge import BridgeUnsupported, maybe_saturate, saturate_jax_fn
 from .pallasgen import PallasGenerator, TileOp, make_tile_op, pick_row_block
-from .pipeline import (MODES, SaturatedKernel, SaturatorConfig,
-                       saturate_all_modes, saturate_program)
+from .pipeline import (CACHE_ENV_VAR, MODES, SaturatedKernel,
+                       SaturatorConfig, saturate_all_modes,
+                       saturate_program)
 from .reference import run_reference
 from .rules import (EXTENDED_RULES, PAPER_RULES, TPU_RULES, Rule, run_rules)
 from .schedule import (SCHEDULE_MODES, ScheduleResult, compute_schedule,
                        is_legal_order, random_topological_order)
 from .ssa import SSAResult, build_ssa
+from .telemetry import SaturationTelemetry, reset_telemetry, telemetry
 
 __all__ = [
+    "CACHE_ENV_VAR", "SaturationTelemetry", "reset_telemetry", "telemetry",
     "LatencyModel", "OpStats", "RooflineCostModel", "node_stats",
     "CostModel", "TPUCostModel", "count_flops", "count_ops",
     "instruction_mix", "ArrayHandle", "Expr", "KernelProgram", "EGraph",

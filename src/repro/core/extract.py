@@ -285,7 +285,9 @@ def extract_dag(eg: EGraph, roots, cost_model: Optional[CostModel] = None,
                 search: str = "beam", beam_width: int = 8,
                 beam_expansions: int = 10_000,
                 hillclimb_evals: int = 100_000,
-                coordinated: bool = True) -> ExtractionResult:
+                coordinated: bool = True,
+                seed_choices: Optional[Sequence[Dict[int, ENode]]] = None
+                ) -> ExtractionResult:
     """Extract a minimum-DAG-cost selection covering ``roots``.
 
     Defaults to the roofline-calibrated cost model: the objective is the
@@ -306,6 +308,11 @@ def extract_dag(eg: EGraph, roots, cost_model: Optional[CostModel] = None,
     2-class moves along chosen-DAG edges — a load and its consumer can
     change together, escaping plateaus where either single swap is
     strictly worse (ROADMAP's multi-class-move item).
+
+    ``seed_choices`` prepends extra restart seeds (partial choices are
+    completed over the tree fixed point) — the persistent saturation
+    cache warm-starts the beam this way, so a near-miss entry can only
+    speed the search up, never worsen the committed result.
 
     Every pass stops on a deterministic evaluation budget
     (``beam_expansions`` for the beam, ``hillclimb_evals`` for the
@@ -340,6 +347,13 @@ def extract_dag(eg: EGraph, roots, cost_model: Optional[CostModel] = None,
         evaluator = Evaluator(eg, cm)
         seeds = _collect_seeds(eg, cm, tree_choice, roots, deadline,
                                EvalBudget(max(hillclimb_evals // 4, 1000)))
+        if seed_choices:
+            # cache warm starts go first; completed over the tree fixed
+            # point so every class keeps a pick
+            seeds = [{**tree_choice,
+                      **{eg.find(c): eg.canonicalize(n)
+                         for c, n in sc.items()}}
+                     for sc in seed_choices] + seeds
         # stage 1 — identical in both modes: polish every restart seed
         # (this IS the PR-2 extractor; in beam mode it doubles as the
         # floor the beam must beat)

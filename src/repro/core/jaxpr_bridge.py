@@ -20,10 +20,17 @@ import numpy as np
 
 from .dsl import Expr, KernelProgram
 from .pipeline import SaturatedKernel, SaturatorConfig, saturate_program
+from .telemetry import telemetry
 
 
 class BridgeUnsupported(ValueError):
-    pass
+    """Raised when a jaxpr cannot be bridged. ``primitive`` names the
+    offending primitive (or a pseudo-primitive like ``"array literal"``)
+    so fallbacks can be counted per coverage gap, not just swallowed."""
+
+    def __init__(self, msg: str, primitive: str = ""):
+        super().__init__(msg)
+        self.primitive = primitive or msg
 
 
 # primitive name -> DSL op (unary)
@@ -67,14 +74,16 @@ def _to_term(prim_name: str, in_terms: List[tuple], eqn) -> tuple:
         return ("pow", in_terms[0], ("const", float(y)))
     if prim_name == "select_n":
         if len(in_terms) != 3:
-            raise BridgeUnsupported("select_n with >2 cases")
+            raise BridgeUnsupported("select_n with >2 cases",
+                                    primitive="select_n")
         # lax.select_n(pred, on_false, on_true)
         return ("select", in_terms[0], in_terms[2], in_terms[1])
     if prim_name in _PASSTHROUGH:
         return in_terms[0]
     if prim_name == "broadcast_in_dim":
         return in_terms[0]  # value-preserving under tile broadcasting
-    raise BridgeUnsupported(f"primitive {prim_name!r} not bridgeable")
+    raise BridgeUnsupported(f"primitive {prim_name!r} not bridgeable",
+                            primitive=prim_name)
 
 
 def saturate_jax_fn(fn: Callable, example_args: Sequence[Any],
@@ -102,7 +111,8 @@ def saturate_jax_fn(fn: Callable, example_args: Sequence[Any],
         if arr.ndim == 0:
             terms[cvar] = ("const", arr.item())
         else:
-            raise BridgeUnsupported("non-scalar closure constants")
+            raise BridgeUnsupported("non-scalar closure constants",
+                                    primitive="closure constant")
 
     from jax.extend.core import Literal
 
@@ -110,13 +120,16 @@ def saturate_jax_fn(fn: Callable, example_args: Sequence[Any],
         if isinstance(atom, Literal):
             val = np.asarray(atom.val)
             if val.ndim != 0:
-                raise BridgeUnsupported("array literal")
+                raise BridgeUnsupported("array literal",
+                                        primitive="array literal")
             return ("const", val.item())
         return terms[atom]
 
     for eqn in jaxpr.eqns:
         if len(eqn.outvars) != 1:
-            raise BridgeUnsupported(f"multi-output prim {eqn.primitive.name}")
+            raise BridgeUnsupported(
+                f"multi-output prim {eqn.primitive.name}",
+                primitive=eqn.primitive.name)
         in_terms = [term_of(a) for a in eqn.invars]
         terms[eqn.outvars[0]] = _to_term(eqn.primitive.name, in_terms, eqn)
 
@@ -162,9 +175,15 @@ def saturate_jax_fn(fn: Callable, example_args: Sequence[Any],
 def maybe_saturate(fn: Callable, example_args: Sequence[Any],
                    config: Optional[SaturatorConfig] = None,
                    name: str = "bridged") -> Tuple[Callable, Optional[BridgedKernel]]:
-    """Best-effort bridge: returns (replacement_or_original, info)."""
+    """Best-effort bridge: returns (replacement_or_original, info).
+
+    A fallback is never silent: the unsupported primitive is counted in
+    :mod:`repro.core.telemetry` (surfaced by saturation_stats and the
+    launch drivers' metrics) so bridge coverage gaps stay visible.
+    """
     try:
         bk = saturate_jax_fn(fn, example_args, config, name)
         return bk.fn, bk
-    except BridgeUnsupported:
+    except BridgeUnsupported as e:
+        telemetry().record_bridge_fallback(e.primitive, name)
         return fn, None

@@ -254,9 +254,16 @@ def make_tile_op(prog: KernelProgram,
     """Saturate ``prog`` and build both the Pallas op and its jnp oracle."""
     cfg = config or SaturatorConfig(mode="accsat", cost_model="tpu_v5e")
     sk = saturate_program(prog, cfg)
+    # reuse the pipeline's ScheduleResult when it computed one (cost
+    # mode, or a cache-hit replay): the schedule depends only on the
+    # choice + cost model, not the emitter, so this skips a second
+    # identical search and keeps the Pallas emission aligned with the
+    # cached statement order
     pgen = PallasGenerator(sk.ssa, sk.extraction, bulk=cfg.use_bulk,
                            reuse_temps=cfg.use_cse,
-                           schedule=cfg.schedule,
+                           schedule=sk.kernel.schedule
+                           if sk.kernel.schedule is not None
+                           else cfg.schedule,
                            sched_cost_model=cfg.make_schedule_cost_model(
                                prog))
     pk = pgen.generate_pallas()

@@ -18,6 +18,7 @@ kernel. Limits default to the paper's §VII values.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from typing import Any, Callable, Dict, Optional
 
@@ -30,7 +31,15 @@ from .egraph import EGraph
 from .extract import SEARCH_STRATEGIES, ExtractionResult, extract_dag
 from .rules import (EXTENDED_RULES, PAPER_RULES, TPU_RULES, Rule,
                     SaturationReport, run_rules)
+from .schedule import compute_schedule
 from .ssa import SSAResult, build_ssa
+from .telemetry import telemetry
+
+# Environment switch for the persistent saturation cache: a directory
+# path enables it for every SaturatorConfig that doesn't set its own
+# cache_dir (the launch drivers use this to make serving/training warm
+# across processes).
+CACHE_ENV_VAR = "REPRO_SAT_CACHE"
 
 MODES = ("baseline", "cse", "cse_sat", "cse_bulk", "accsat")
 COST_MODELS = ("paper", "tpu_v5e", "roofline")
@@ -75,6 +84,15 @@ class SaturatorConfig:
     # Coordinated multi-class beam moves (load + consumers swapped
     # together) — escapes plateaus the 1-swap neighborhood cannot leave.
     beam_coordinated: bool = True
+    # Persistent saturation cache (repro.cache): a directory path (or a
+    # SaturationCache instance) enabling on-disk reuse of committed
+    # extraction choices + schedule orders across processes. None falls
+    # back to the REPRO_SAT_CACHE environment variable (unset = off).
+    # An exact hit skips saturation, beam search, and schedule search
+    # and re-emits a bit-identical kernel; a near-miss (same kernel,
+    # other shapes) seeds the searches when cache_warm_start is on.
+    cache_dir: Optional[Any] = None
+    cache_warm_start: bool = True
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -158,6 +176,10 @@ class SaturatedKernel:
     config: SaturatorConfig
     ssa_wall_s: float = 0.0
     codegen_wall_s: float = 0.0
+    # persistent-cache outcome for this build: "off" (no cache), "miss"
+    # (cold search, result stored), "warm" (searches seeded from a
+    # near-miss entry), "hit" (replayed with no search at all)
+    cache_status: str = "off"
 
     @property
     def fn(self) -> Callable:
@@ -200,11 +222,12 @@ class SaturatedKernel:
             "schedule_predicted_ns": (
                 self.kernel.schedule.predicted_ns
                 if self.kernel.schedule is not None else None),
+            "cache": self.cache_status,
             "sat_iterations": self.saturation.iterations
             if self.saturation else 0,
             "sat_nodes": self.saturation.n_nodes if self.saturation else 0,
-            "sat_stop": self.saturation.stop_reason
-            if self.saturation else "disabled",
+            "sat_stop": self.saturation.stop_reason if self.saturation
+            else ("cached" if self.cache_status == "hit" else "disabled"),
             "ssa_ms": self.ssa_wall_s * 1e3,
             "sat_s": self.saturation.wall_s if self.saturation else 0.0,
             "extract_s": self.extraction.wall_s,
@@ -230,14 +253,150 @@ def predict_choice(ssa: SSAResult, choice, roots, n_stores: int,
             profile=profile))
 
 
+def _resolve_cache(cfg: SaturatorConfig):
+    """The configured SaturationCache, or None (off). ``cache_dir=None``
+    consults the REPRO_SAT_CACHE environment variable."""
+    cdir = cfg.cache_dir
+    if cdir is None:
+        cdir = os.environ.get(CACHE_ENV_VAR) or None
+        if cdir is None:
+            return None
+    from repro.cache import SaturationCache
+    if isinstance(cdir, SaturationCache):
+        return cdir
+    return SaturationCache(cdir)
+
+
+def _schedule_cm(cfg: SaturatorConfig, prog, eg):
+    """The schedule-pricing model the generator would use (None for flat
+    models — compute_schedule then defaults to the analytic roofline)."""
+    cm = cfg.make_schedule_cost_model(prog)
+    if not hasattr(cm, "latency"):
+        return None
+    if hasattr(cm, "bind_egraph"):
+        cm.bind_egraph(eg)
+    return cm
+
+
+def _replay_cached(prog, cfg: SaturatorConfig, ssa: SSAResult,
+                   ssa_wall: float, entry: Dict[str, Any], extra_fns
+                   ) -> Optional[SaturatedKernel]:
+    """Exact-hit path: graft the cached choice into the *unsaturated*
+    SSA e-graph, replay the cached statement order, and re-emit. Skips
+    run_rules, the beam, and the schedule search entirely. Returns None
+    (caller goes cold) when the entry doesn't validate."""
+    from repro.cache import CacheInvalid, graft_choice, orders_from_doc
+    from repro.cache.serialize import index_to_cid
+    try:
+        t0 = time.perf_counter()
+        choice, roots = graft_choice(ssa.egraph, entry["choice"],
+                                     ssa.roots())
+        sched = None
+        sched_doc = entry.get("schedule")
+        if sched_doc is not None:
+            node_cids = index_to_cid(ssa.egraph, entry["choice"])
+            fixed = orders_from_doc(sched_doc, node_cids)
+            try:
+                sched = compute_schedule(
+                    ssa, dict(choice), mode=cfg.schedule_mode,
+                    cost_model=_schedule_cm(cfg, prog, ssa.egraph),
+                    fixed_orders=fixed)
+            except ValueError as e:
+                raise CacheInvalid(f"cached order rejected: {e}") from e
+            by = sched_doc.get("predicted_by_mode") or {}
+            sched.predicted_by_mode.update(
+                {k: float(v) for k, v in by.items()})
+        elif cfg.schedule_mode == "cost":
+            # without a persisted order the cost search would have to
+            # re-run — that's a miss, not a hit
+            raise CacheInvalid("entry lacks schedule orders")
+        extract_wall = time.perf_counter() - t0
+        extraction = ExtractionResult(
+            choice=choice, roots=roots,
+            dag_cost=float(entry.get("dag_cost") or 0.0),
+            tree_cost=float(entry.get("tree_cost") or 0.0),
+            wall_s=extract_wall, search="cache")
+        t1 = time.perf_counter()
+        gen = CodeGenerator(
+            ssa, extraction, bulk=cfg.use_bulk, extra_fns=extra_fns,
+            reuse_temps=cfg.use_cse,
+            schedule=sched if sched is not None else cfg.schedule,
+            sched_cost_model=cfg.make_schedule_cost_model(prog)
+            ).generate()
+        codegen_wall = time.perf_counter() - t1
+    except CacheInvalid as e:
+        telemetry().record_invalid(prog.name, str(e))
+        return None
+    predicted = predict_choice(ssa, extraction.choice, extraction.roots,
+                               gen.stats.n_stores,
+                               profile=cfg.device_profile
+                               if cfg.cost_model == "roofline" else None)
+    if predicted is not None:
+        extraction.predicted = predicted
+    return SaturatedKernel(kernel=gen, ssa=ssa, extraction=extraction,
+                           saturation=None, config=cfg,
+                           ssa_wall_s=ssa_wall, codegen_wall_s=codegen_wall,
+                           cache_status="hit")
+
+
+def _store_entry(cache, key, cfg: SaturatorConfig, prog,
+                 sk: SaturatedKernel):
+    """Persist a cold/warm result (best-effort: never raises)."""
+    from repro.cache import (CacheInvalid, choice_to_doc, make_entry,
+                             schedule_to_doc)
+    try:
+        eg = sk.ssa.egraph
+        choice_doc, index_of = choice_to_doc(
+            eg, sk.extraction.choice, sk.extraction.roots)
+        sr = sk.kernel.schedule
+        if sr is None:
+            # non-cost modes keep the legacy emitters; the named order
+            # is reconstructed searchlessly (move_budget=0) so the hit
+            # path can replay it explicitly, bit-identically
+            sr = compute_schedule(
+                sk.ssa, dict(sk.extraction.choice),
+                mode=cfg.schedule_mode,
+                cost_model=_schedule_cm(cfg, prog, eg), move_budget=0)
+        sched_doc = schedule_to_doc(sr, eg, index_of)
+        entry = make_entry(
+            key, choice_doc=choice_doc, schedule_doc=sched_doc,
+            predicted=sk.extraction.predicted,
+            dag_cost=sk.extraction.dag_cost, report=sk.report())
+        entry["tree_cost"] = sk.extraction.tree_cost
+        cache.put(key, entry)
+    except (CacheInvalid, ValueError, OSError) as e:
+        telemetry().record_invalid(prog.name, f"store failed: {e}")
+
+
 def saturate_program(prog: KernelProgram,
                      config: Optional[SaturatorConfig] = None,
                      extra_fns: Optional[Dict[str, Callable]] = None
                      ) -> SaturatedKernel:
     cfg = config or SaturatorConfig()
-    t0 = time.perf_counter()
+    cache = _resolve_cache(cfg)
+    t_begin = time.perf_counter()
     ssa = build_ssa(prog)
-    ssa_wall = time.perf_counter() - t0
+    ssa_wall = time.perf_counter() - t_begin
+
+    key = entry = None
+    status = "off"
+    if cache is not None:
+        from repro.cache import cache_key_for
+        key = cache_key_for(prog, cfg)
+        entry, status = cache.lookup(key)
+        if status == "warm" and not cfg.cache_warm_start:
+            entry, status = None, "miss"
+        if status == "hit":
+            sk = _replay_cached(prog, cfg, ssa, ssa_wall, entry, extra_fns)
+            if sk is not None:
+                telemetry().record_cache(
+                    "hit", prog.name, time.perf_counter() - t_begin)
+                return sk
+            # invalid exact entry (already counted): rebuild cold on a
+            # fresh e-graph — the failed graft may have dirtied this one
+            entry, status = None, "miss"
+            ssa = build_ssa(prog)
+
     sat_report = None
     if cfg.use_sat:
         sat_report = run_rules(ssa.egraph, cfg.rules(),
@@ -246,6 +405,24 @@ def saturate_program(prog: KernelProgram,
                                time_limit_s=cfg.time_limit_s)
     roots = ssa.roots()
     cm = cfg.make_cost_model(prog)
+    seed_choices = None
+    seed_order_keys = None
+    if entry is not None and status == "warm":
+        # near miss (same kernel/rules/config, other shapes): graft the
+        # cached choice into the saturated graph as a beam seed and keep
+        # its statement order as a schedule-search seed
+        from repro.cache import CacheInvalid, graft_choice, orders_from_doc
+        from repro.cache.serialize import index_to_cid
+        try:
+            wchoice, _ = graft_choice(ssa.egraph, entry["choice"], roots)
+            seed_choices = [wchoice]
+            if entry.get("schedule") is not None:
+                node_cids = index_to_cid(ssa.egraph, entry["choice"])
+                seed_order_keys = orders_from_doc(entry["schedule"],
+                                                  node_cids)
+        except CacheInvalid as e:
+            telemetry().record_invalid(prog.name, str(e))
+            status = "miss"
     extraction = extract_dag(
         ssa.egraph, tuple(roots) if roots else (),
         cost_model=cm,
@@ -254,14 +431,24 @@ def saturate_program(prog: KernelProgram,
         search=cfg.search, beam_width=cfg.beam_width,
         beam_expansions=cfg.beam_expansions,
         hillclimb_evals=cfg.hillclimb_evals,
-        coordinated=cfg.beam_coordinated)
+        coordinated=cfg.beam_coordinated,
+        seed_choices=seed_choices)
     t1 = time.perf_counter()
     # the cost scheduler prices statement orders with the same (possibly
     # calibrated) model extraction minimized — one objective end to end
+    sched_arg: Any = cfg.schedule
+    if cfg.schedule_mode == "cost" and seed_order_keys is not None:
+        try:
+            sched_arg = compute_schedule(
+                ssa, dict(extraction.choice), mode="cost",
+                cost_model=_schedule_cm(cfg, prog, ssa.egraph),
+                seed_orders=seed_order_keys)
+        except ValueError:
+            sched_arg = cfg.schedule
     gen = CodeGenerator(ssa, extraction, bulk=cfg.use_bulk,
                         extra_fns=extra_fns,
                         reuse_temps=cfg.use_cse,
-                        schedule=cfg.schedule,
+                        schedule=sched_arg,
                         sched_cost_model=cfg.make_schedule_cost_model(prog)
                         ).generate()
     codegen_wall = time.perf_counter() - t1
@@ -276,9 +463,16 @@ def saturate_program(prog: KernelProgram,
                                if cfg.cost_model == "roofline" else None)
     if predicted is not None:
         extraction.predicted = predicted
-    return SaturatedKernel(kernel=gen, ssa=ssa, extraction=extraction,
-                           saturation=sat_report, config=cfg,
-                           ssa_wall_s=ssa_wall, codegen_wall_s=codegen_wall)
+    sk = SaturatedKernel(kernel=gen, ssa=ssa, extraction=extraction,
+                         saturation=sat_report, config=cfg,
+                         ssa_wall_s=ssa_wall, codegen_wall_s=codegen_wall,
+                         cache_status=status)
+    if cache is not None and key is not None:
+        telemetry().record_cache("warm" if status == "warm" else "miss",
+                                 prog.name,
+                                 time.perf_counter() - t_begin)
+        _store_entry(cache, key, cfg, prog, sk)
+    return sk
 
 
 def saturate_all_modes(prog: KernelProgram, base: Optional[SaturatorConfig]

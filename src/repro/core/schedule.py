@@ -678,10 +678,49 @@ def _cost_order(lat: LatencyModel, units: List[SchedUnit],
 # ---------------------------------------------------------------------------
 # Entry point
 # ---------------------------------------------------------------------------
+def unit_key(eg, u: SchedUnit) -> Tuple[str, Any]:
+    """Process-portable identity of one unit: loads/compute by canonical
+    e-class, stores by their SSA store order, loops by loop id. The
+    persistent saturation cache serializes region orders as these keys
+    (with cids further translated to structural node indices)."""
+    if u.kind in ("load", "compute"):
+        return (u.kind, eg.find(u.cid))
+    if u.kind == "store":
+        return ("store", u.item.order)
+    return ("loop", u.item.loop_id)
+
+
+def _order_from_keys(eg, units: List[SchedUnit],
+                     keys: Optional[Sequence[Tuple[str, Any]]]
+                     ) -> List[int]:
+    """Translate a unit-key order back to uids; raises ValueError when a
+    key is missing/unknown or the order is illegal."""
+    if keys is None:
+        raise ValueError("no cached order for this region")
+    key_uid = {}
+    for u in units:
+        key_uid[unit_key(eg, u)] = u.uid
+    order: List[int] = []
+    for kind, ref in keys:
+        k = (kind, eg.find(ref)) if kind in ("load", "compute") \
+            else (kind, ref)
+        uid = key_uid.get(k)
+        if uid is None:
+            raise ValueError(f"cached order names unknown unit {k!r}")
+        order.append(uid)
+    if not is_legal_order(units, order):
+        raise ValueError("cached order is not a legal topological order")
+    return order
+
+
 def compute_schedule(ssa: SSAResult, choice: Dict[int, ENode], *,
                      mode: str = "cost", cost_model=None,
                      vmem_budget_bytes: Optional[int] = None,
-                     move_budget: int = DEFAULT_MOVE_BUDGET
+                     move_budget: int = DEFAULT_MOVE_BUDGET,
+                     fixed_orders: Optional[Dict[Tuple[int, ...],
+                                                 Sequence]] = None,
+                     seed_orders: Optional[Dict[Tuple[int, ...],
+                                                Sequence]] = None
                      ) -> ScheduleResult:
     """Build the dependence DAG of the extracted ``choice`` and order it
     under ``mode`` (``"source" | "bulk" | "cost"``).
@@ -691,6 +730,14 @@ def compute_schedule(ssa: SSAResult, choice: Dict[int, ENode], *,
     pass the pipeline's calibrated model so scheduling optimizes the
     same objective as extraction). Loops are scheduled recursively and
     priced as atomic units of their body's one-trip latency.
+
+    ``fixed_orders`` replays a persisted schedule: a ``{region path:
+    [unit keys]}`` map (see :func:`unit_key`) that becomes the emitted
+    order verbatim — **no cost search runs** (the exact-cache-hit
+    path). Every region must be present and legal or ValueError is
+    raised (callers fall back to a cold search). ``seed_orders`` has
+    the same shape but only *seeds* the cost search (warm start);
+    unmappable/illegal seeds are ignored.
     """
     if mode not in SCHEDULE_MODES:
         raise ValueError(
@@ -724,13 +771,31 @@ def compute_schedule(ssa: SSAResult, choice: Dict[int, ENode], *,
                   "bulk": _bulk_order(units)}
         reports = {m: _region_ns(lat, units, o, vmem_budget_bytes)
                    for m, o in orders.items()}
-        cost_o, scored = _cost_order(
-            lat, units, [orders["bulk"], orders["source"]],
-            vmem_budget_bytes, budget)
-        moves += scored
-        orders["cost"] = cost_o
-        reports["cost"] = _region_ns(lat, units, cost_o,
-                                     vmem_budget_bytes)
+        if fixed_orders is not None:
+            # replay a persisted order verbatim — no search
+            fixed = _order_from_keys(b.eg, units, fixed_orders.get(path))
+            orders[mode] = fixed
+            if mode != "cost":
+                orders["cost"] = orders["bulk"]   # placeholder pricing
+            reports[mode] = _region_ns(lat, units, fixed,
+                                       vmem_budget_bytes)
+            if "cost" not in reports:
+                reports["cost"] = _region_ns(lat, units, orders["cost"],
+                                             vmem_budget_bytes)
+        else:
+            seeds = [orders["bulk"], orders["source"]]
+            if seed_orders is not None and path in seed_orders:
+                try:
+                    seeds.insert(0, _order_from_keys(
+                        b.eg, units, seed_orders[path]))
+                except ValueError:
+                    pass   # a stale seed is just not a seed
+            cost_o, scored = _cost_order(lat, units, seeds,
+                                         vmem_budget_bytes, budget)
+            moves += scored
+            orders["cost"] = cost_o
+            reports["cost"] = _region_ns(lat, units, cost_o,
+                                         vmem_budget_bytes)
         for m in SCHEDULE_MODES:
             mode_ns[m][path] = reports[m]["latency_ns"]
         chosen = orders[mode]

@@ -1,0 +1,114 @@
+"""Process-wide saturation telemetry (PR 6).
+
+One tiny registry counts what the saturation subsystem actually did at
+runtime — persistent-cache hits / misses / warm starts with their wall
+times, and jaxpr-bridge fallbacks per unsupported primitive (the
+coverage gaps ``maybe_saturate`` used to swallow silently). It has no
+dependencies so every layer (core pipeline, cache store, jaxpr bridge,
+launch drivers, benchmarks) can report into the same counters without
+import cycles.
+
+Consumers: ``launch/serve.py`` / ``launch/train.py`` surface
+``snapshot()`` in their metrics, ``benchmarks/saturation_stats.py``
+records it per run, and ``examples/serve_decode.py`` commits it to
+``BENCH_6.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, List
+
+
+@dataclasses.dataclass
+class SaturationTelemetry:
+    """Counters for one process. All methods are thread-safe."""
+    cache_hits: int = 0
+    cache_misses: int = 0
+    cache_warm_starts: int = 0
+    cache_stores: int = 0
+    cache_invalid: int = 0         # entries rejected (corrupt/stale/version)
+    cold_wall_s: float = 0.0       # saturate+extract+schedule, no cache help
+    warm_wall_s: float = 0.0       # same, seeded from a near-miss entry
+    hit_wall_s: float = 0.0        # replay-only wall time on exact hits
+    bridge_fallbacks: Dict[str, int] = dataclasses.field(
+        default_factory=dict)  # primitive name -> count
+    events: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    # -- cache events -------------------------------------------------------
+    def record_cache(self, status: str, kernel: str, wall_s: float):
+        """status in {"hit", "warm", "miss"} — one saturate_program call."""
+        with self._lock:
+            if status == "hit":
+                self.cache_hits += 1
+                self.hit_wall_s += wall_s
+            elif status == "warm":
+                self.cache_warm_starts += 1
+                self.warm_wall_s += wall_s
+            else:
+                self.cache_misses += 1
+                self.cold_wall_s += wall_s
+            self.events.append({"kind": "cache", "status": status,
+                                "kernel": kernel, "wall_s": wall_s})
+
+    def record_store(self, kernel: str):
+        with self._lock:
+            self.cache_stores += 1
+
+    def record_invalid(self, kernel: str, reason: str):
+        with self._lock:
+            self.cache_invalid += 1
+            self.events.append({"kind": "cache_invalid", "kernel": kernel,
+                                "reason": reason})
+
+    # -- bridge events ------------------------------------------------------
+    def record_bridge_fallback(self, primitive: str, fn_name: str = ""):
+        with self._lock:
+            self.bridge_fallbacks[primitive] = \
+                self.bridge_fallbacks.get(primitive, 0) + 1
+            self.events.append({"kind": "bridge_fallback",
+                                "primitive": primitive, "fn": fn_name})
+
+    # -- reporting ----------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        with self._lock:
+            lookups = self.cache_hits + self.cache_misses \
+                + self.cache_warm_starts
+            return {
+                "cache_hits": self.cache_hits,
+                "cache_misses": self.cache_misses,
+                "cache_warm_starts": self.cache_warm_starts,
+                "cache_stores": self.cache_stores,
+                "cache_invalid": self.cache_invalid,
+                "cache_hit_rate": (self.cache_hits / lookups
+                                   if lookups else 0.0),
+                "cold_wall_s": self.cold_wall_s,
+                "warm_wall_s": self.warm_wall_s,
+                "hit_wall_s": self.hit_wall_s,
+                "bridge_fallbacks": dict(sorted(
+                    self.bridge_fallbacks.items())),
+            }
+
+    def reset(self):
+        with self._lock:
+            self.cache_hits = self.cache_misses = 0
+            self.cache_warm_starts = self.cache_stores = 0
+            self.cache_invalid = 0
+            self.cold_wall_s = self.warm_wall_s = self.hit_wall_s = 0.0
+            self.bridge_fallbacks.clear()
+            self.events.clear()
+
+
+_TELEMETRY = SaturationTelemetry()
+
+
+def telemetry() -> SaturationTelemetry:
+    """The process-wide registry."""
+    return _TELEMETRY
+
+
+def reset_telemetry():
+    _TELEMETRY.reset()

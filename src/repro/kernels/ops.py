@@ -24,6 +24,7 @@ from .ssd_scan import ssd_decode_step, ssd_scan, ssd_scan_jnp
 from .tile_programs import get_tile_op
 
 _IMPL: Optional[str] = None  # None = auto
+_SAT_CACHE: Optional[str] = None  # persistent saturation cache directory
 
 
 def set_impl(impl: Optional[str]):
@@ -31,6 +32,25 @@ def set_impl(impl: Optional[str]):
     global _IMPL
     assert impl in (None, "auto", "pallas", "jnp", "ref")
     _IMPL = None if impl == "auto" else impl
+
+
+def set_saturation_cache(path: Optional[str]):
+    """Point every tile op built after this call at a persistent
+    saturation cache directory (repro.cache): saturation/beam results
+    are replayed from disk instead of re-searched per process. None
+    disables (the default; the REPRO_SAT_CACHE env var still applies
+    at the pipeline level). The launch drivers call this at startup so
+    the serve/train hot paths are warm across boots."""
+    global _SAT_CACHE
+    _SAT_CACHE = str(path) if path is not None else None
+
+
+def current_saturation_cache() -> Optional[str]:
+    return _SAT_CACHE
+
+
+def _op(name: str):
+    return get_tile_op(name, cache_dir=_SAT_CACHE)
 
 
 def current_impl() -> str:
@@ -43,7 +63,7 @@ def _tile(name: str, *arrays, **scalars):
     impl = current_impl()
     if impl == "ref":
         return getattr(_ref, f"{name}_ref")(*arrays, **scalars)
-    op = get_tile_op(name)
+    op = _op(name)
     if impl == "pallas":
         return op.apply(*arrays, **scalars)
     return op.jax_ref(*arrays, **scalars)
@@ -69,7 +89,7 @@ def swiglu(a, b):
 def gelu(a):
     if current_impl() == "ref":
         return _ref.gelu_ref(a)
-    op = get_tile_op("gelu")
+    op = _op("gelu")
     return op.apply(a) if current_impl() == "pallas" else op.jax_ref(a)
 
 
@@ -78,7 +98,7 @@ def rotary(q, cos, sin):
     impl = current_impl()
     if impl == "ref":
         return _ref.rotary_ref(q, cos, sin)
-    op = get_tile_op("rotary")
+    op = _op("rotary")
     cosb = jnp.broadcast_to(cos, q.shape)
     sinb = jnp.broadcast_to(sin, q.shape)
     if impl == "pallas":
@@ -98,7 +118,7 @@ def moe_router_probs(logits):
     impl = current_impl()
     if impl == "ref":
         return _ref.softmax_ref(logits)
-    op = get_tile_op("moe_router")
+    op = _op("moe_router")
     return op.apply(logits) if impl == "pallas" else op.jax_ref(logits)
 
 
@@ -110,7 +130,7 @@ def adamw_update(param, grad, m, v, *, lr, b1, b2, eps, wd,
         return _ref.adamw_ref(param, grad, m, v, lr=lr, b1=b1, b2=b2,
                               eps=eps, wd=wd, inv_bc1=inv_bc1,
                               inv_bc2=inv_bc2)
-    op = get_tile_op("adamw")
+    op = _op("adamw")
     kw = dict(lr=lr, b1=b1, b2=b2, eps=eps, wd=wd,
               inv_bc1=inv_bc1, inv_bc2=inv_bc2)
     if impl == "pallas":
@@ -123,7 +143,7 @@ def ssd_gate(dt_raw, a_log, bias=0.0):
     impl = current_impl()
     if impl == "ref":
         return _ref.ssd_gate_ref(dt_raw, a_log, bias=bias)
-    op = get_tile_op("ssd_gate")
+    op = _op("ssd_gate")
     a_b = jnp.broadcast_to(a_log, dt_raw.shape)
     if impl == "pallas":
         return op.apply(dt_raw, a_b, bias=bias)

@@ -238,7 +238,8 @@ PROGRAMS: Dict[str, callable] = {
 @functools.lru_cache(maxsize=None)
 def get_tile_op(name: str, mode: str = "accsat",
                 schedule: str = None,
-                device_profile: str = None) -> TileOp:
+                device_profile: str = None,
+                cache_dir: str = None) -> TileOp:
     """Build (and cache) the saturated TileOp for a named program.
 
     ``schedule`` picks the statement order of the emitted kernel
@@ -247,8 +248,15 @@ def get_tile_op(name: str, mode: str = "accsat",
     way, so the *selected term* is identical across schedules; only the
     emission order moves. ``device_profile`` prices the cost-driven
     schedule search with a calibrated model (name/path of a profile
-    under ``experiments/device_profiles/``)."""
+    under ``experiments/device_profiles/``).
+
+    ``cache_dir`` (see :mod:`repro.cache`) persists the saturation
+    result on disk: this ``lru_cache`` only amortizes within a process,
+    the directory amortizes across processes and boots. Use
+    ``repro.kernels.ops.set_saturation_cache`` to set it globally for
+    the model hot paths."""
     cfg = SaturatorConfig(mode=mode, cost_model="tpu_v5e",
                           tpu_rules=(mode in ("cse_sat", "accsat")),
-                          schedule=schedule, device_profile=device_profile)
+                          schedule=schedule, device_profile=device_profile,
+                          cache_dir=cache_dir)
     return make_tile_op(PROGRAMS[name](), cfg)

@@ -23,7 +23,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.telemetry import telemetry
+from repro.kernels import ops
 from repro.models import get_model
+
+# Default persistent saturation-cache location for the serving CLI: the
+# decode hot path pays beam-search cost once per kernel shape across
+# boots, not once per process (disable with --no-cache).
+DEFAULT_CACHE_DIR = "/tmp/repro_sat_cache"
 
 
 @dataclasses.dataclass
@@ -37,7 +44,12 @@ class Request:
 
 class Server:
     def __init__(self, arch: str, *, smoke: bool = True, max_batch: int = 4,
-                 max_seq: int = 128, seed: int = 0):
+                 max_seq: int = 128, seed: int = 0,
+                 cache_dir: Optional[str] = None):
+        # every saturated tile op the model layers dispatch through
+        # repro.kernels.ops is built (or replayed) via this cache
+        if cache_dir is not None:
+            ops.set_saturation_cache(cache_dir)
         arch = ARCH_IDS.get(arch, arch)
         self.cfg = get_smoke_config(arch) if smoke else get_config(arch)
         self.model = get_model(self.cfg)
@@ -84,6 +96,7 @@ class Server:
                     r.out.append(int(tok[i, 0]))
                 r.done = True
                 results[r.rid] = r.out
+        self.metrics["saturation"] = telemetry().snapshot()
         return results
 
 
@@ -94,9 +107,14 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--cache-dir", default=DEFAULT_CACHE_DIR,
+                    help="persistent saturation cache directory")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the on-disk saturation cache")
     args = ap.parse_args(argv)
 
-    srv = Server(args.arch, smoke=args.smoke)
+    cache_dir = None if args.no_cache else args.cache_dir
+    srv = Server(args.arch, smoke=args.smoke, cache_dir=cache_dir)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(1, srv.cfg.vocab,
@@ -107,10 +125,15 @@ def main(argv=None):
     t0 = time.time()
     out = srv.generate(reqs)
     dt = time.time() - t0
+    sat = srv.metrics.get("saturation", {})
     print(f"arch={args.arch} served {len(out)} requests, "
           f"{srv.metrics['tokens']} tokens in {dt:.1f}s "
           f"({srv.metrics['prefills']} prefills, "
           f"{srv.metrics['decode_ticks']} ticks)")
+    print(f"  saturation cache: hits={sat.get('cache_hits', 0)} "
+          f"warm={sat.get('cache_warm_starts', 0)} "
+          f"misses={sat.get('cache_misses', 0)} "
+          f"hit_rate={sat.get('cache_hit_rate', 0.0):.2f}")
     for rid in sorted(out):
         print(f"  req{rid}: {out[rid]}")
     return out

@@ -22,7 +22,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core.telemetry import telemetry
 from repro.data import DataConfig, ShardedTokenPipeline
+from repro.kernels import ops
 from repro.models import get_model
 from repro.optim import OptConfig, apply_updates, init_opt_state
 from repro.parallel.compression import Compressor
@@ -32,7 +34,13 @@ from repro.runtime import ElasticTrainer, FailureInjector, TrainLoopConfig
 def build_trainer(arch: str, *, smoke: bool, steps: int, batch: int,
                   seq: int, ckpt_dir: str, compress: str = "none",
                   inject: Optional[dict] = None, lr: float = 3e-4,
-                  num_shards: int = 1, seed: int = 0) -> ElasticTrainer:
+                  num_shards: int = 1, seed: int = 0,
+                  cache_dir: Optional[str] = None) -> ElasticTrainer:
+    # persist saturation results (norm/optimizer tile ops) across runs:
+    # a restarted or elastically-recovered job replays committed kernels
+    # instead of re-searching
+    if cache_dir is not None:
+        ops.set_saturation_cache(cache_dir)
     arch = ARCH_IDS.get(arch, arch)
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     model = get_model(cfg)
@@ -96,6 +104,10 @@ def main(argv=None):
                     choices=["none", "bf16", "int8", "int8_ef"])
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--inject-failure-at", type=int, default=None)
+    ap.add_argument("--cache-dir", default="/tmp/repro_sat_cache",
+                    help="persistent saturation cache directory")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="disable the on-disk saturation cache")
     args = ap.parse_args(argv)
 
     inject = {args.inject_failure_at: ("node_loss", 1)} \
@@ -103,13 +115,19 @@ def main(argv=None):
     trainer = build_trainer(args.arch, smoke=args.smoke, steps=args.steps,
                             batch=args.batch, seq=args.seq,
                             ckpt_dir=args.ckpt_dir, lr=args.lr,
-                            compress=args.compress, inject=inject)
+                            compress=args.compress, inject=inject,
+                            cache_dir=None if args.no_cache
+                            else args.cache_dir)
     t0 = time.time()
     out = trainer.run()
     losses = out["losses"]
     print(f"arch={args.arch} steps={out['final_step']} "
           f"loss {losses[0]:.3f} -> {losses[-1]:.3f} "
           f"recoveries={out['recoveries']} wall={time.time()-t0:.1f}s")
+    sat = telemetry().snapshot()
+    print(f"  saturation cache: hits={sat['cache_hits']} "
+          f"warm={sat['cache_warm_starts']} misses={sat['cache_misses']} "
+          f"bridge_fallbacks={sum(sat['bridge_fallbacks'].values())}")
     assert losses[-1] < losses[0], "training did not reduce loss"
     return out
 

@@ -1,0 +1,280 @@
+"""Persistent saturation cache (PR 6): exact-hit replay, warm starts,
+robustness against corrupt/stale entries, concurrent writers, and the
+telemetry the launch drivers surface."""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import threading
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (KernelProgram, SaturatorConfig, maybe_saturate,
+                        reset_telemetry, rmean, rsqrt, saturate_program,
+                        telemetry)
+from repro.cache import (FORMAT_VERSION, SaturationCache, cache_key_for)
+
+
+def _norm_prog(tile=(8, 128)):
+    """rmsnorm-shaped program with a parameterized tile: same structure
+    (= same warm key) for every tile, different exact key per shape."""
+    p = KernelProgram("cache_norm")
+    x = p.array_in("x", shape=tile)
+    g = p.array_in("g", shape=(1, tile[1]))
+    p.array_out("o", shape=tile)
+    eps = p.scalar("eps")
+    xv = x.load()
+    inv = rsqrt(rmean(xv * xv) + eps)
+    p.store("o", xv * inv * g.load())
+    return p
+
+
+def _cfg(tmp_path, **kw):
+    kw.setdefault("mode", "accsat")
+    kw.setdefault("tpu_rules", True)
+    kw.setdefault("cost_model", "tpu_v5e")
+    return SaturatorConfig(cache_dir=str(tmp_path), **kw)
+
+
+def _entry_files(tmp_path):
+    return sorted(pathlib.Path(tmp_path).rglob("*.json"))
+
+
+# -- exact hits -------------------------------------------------------------
+@pytest.mark.parametrize("schedule", [None, "cost"])
+def test_exact_hit_bit_identical_and_skips_search(tmp_path, schedule):
+    """A second build of the same program+config replays from disk:
+    no saturation, no beam search, no schedule search — and the
+    generated kernel is bit-for-bit the cold one."""
+    cfg = _cfg(tmp_path, schedule=schedule)
+    cold = saturate_program(_norm_prog(), cfg)
+    assert cold.cache_status == "miss"
+    assert _entry_files(tmp_path), "cold run stored no entry"
+
+    hit = saturate_program(_norm_prog(), cfg)
+    assert hit.cache_status == "hit"
+    assert hit.saturation is None            # run_rules never executed
+    assert hit.extraction.search == "cache"  # beam/hillclimb never ran
+    assert hit.kernel.source == cold.kernel.source
+    assert hit.report()["sat_stop"] == "cached"
+
+
+def test_hit_and_miss_telemetry(tmp_path):
+    reset_telemetry()
+    cfg = _cfg(tmp_path)
+    saturate_program(_norm_prog(), cfg)
+    saturate_program(_norm_prog(), cfg)
+    snap = telemetry().snapshot()
+    assert snap["cache_misses"] == 1
+    assert snap["cache_hits"] == 1
+    assert snap["cache_stores"] == 1
+    assert snap["cache_hit_rate"] == 0.5
+    assert snap["cold_wall_s"] > snap["hit_wall_s"] > 0
+
+
+def test_no_cache_reports_off(tmp_path):
+    sk = saturate_program(_norm_prog(), SaturatorConfig(mode="accsat"))
+    assert sk.cache_status == "off"
+    assert not _entry_files(tmp_path)
+
+
+# -- warm starts ------------------------------------------------------------
+def test_warm_start_on_shape_change(tmp_path):
+    """Same kernel structure at a new shape: the entry seeds the beam
+    and schedule search (status 'warm'), and the new shape's committed
+    result is stored so the third build is an exact hit."""
+    cfg = _cfg(tmp_path, schedule="cost")
+    k8 = cache_key_for(_norm_prog((8, 128)), cfg)
+    k16 = cache_key_for(_norm_prog((16, 128)), cfg)
+    assert k8.warm_key == k16.warm_key
+    assert k8.exact_key != k16.exact_key
+
+    assert saturate_program(_norm_prog((8, 128)), cfg).cache_status == "miss"
+    warm = saturate_program(_norm_prog((16, 128)), cfg)
+    assert warm.cache_status == "warm"
+    hit = saturate_program(_norm_prog((16, 128)), cfg)
+    assert hit.cache_status == "hit"
+    assert hit.kernel.source == warm.kernel.source
+
+
+def test_warm_start_can_be_disabled(tmp_path):
+    cfg = _cfg(tmp_path)
+    saturate_program(_norm_prog((8, 128)), cfg)
+    cfg_nw = _cfg(tmp_path, cache_warm_start=False)
+    assert saturate_program(
+        _norm_prog((16, 128)), cfg_nw).cache_status == "miss"
+
+
+# -- key determinism & invalidation -----------------------------------------
+def test_keys_deterministic_across_builds(tmp_path):
+    cfg = _cfg(tmp_path)
+    a = cache_key_for(_norm_prog(), cfg)
+    b = cache_key_for(_norm_prog(), cfg)   # a *fresh* program object
+    assert (a.warm_key, a.exact_key) == (b.warm_key, b.exact_key)
+
+
+def test_rules_change_invalidates(tmp_path):
+    """Dropping the TPU rule set changes the rules fingerprint: the old
+    entry must not be served (not even as a warm seed)."""
+    saturate_program(_norm_prog(), _cfg(tmp_path, tpu_rules=True))
+    sk = saturate_program(_norm_prog(), _cfg(tmp_path, tpu_rules=False))
+    assert sk.cache_status == "miss"
+
+
+def test_config_change_invalidates(tmp_path):
+    saturate_program(_norm_prog(), _cfg(tmp_path))
+    sk = saturate_program(_norm_prog(), _cfg(tmp_path, beam_width=4))
+    assert sk.cache_status == "miss"
+
+
+# -- robustness -------------------------------------------------------------
+def test_truncated_entry_falls_back_cold(tmp_path):
+    cfg = _cfg(tmp_path)
+    cold = saturate_program(_norm_prog(), cfg)
+    [f] = _entry_files(tmp_path)
+    f.write_text(f.read_text()[: len(f.read_text()) // 2])  # truncate
+
+    reset_telemetry()
+    again = saturate_program(_norm_prog(), cfg)
+    assert again.cache_status == "miss"
+    assert again.kernel.source == cold.kernel.source
+    assert telemetry().snapshot()["cache_invalid"] >= 1
+    # ... and the cold rebuild repaired the entry
+    assert saturate_program(_norm_prog(), cfg).cache_status == "hit"
+
+
+def test_garbage_payload_falls_back_cold(tmp_path):
+    cfg = _cfg(tmp_path)
+    saturate_program(_norm_prog(), cfg)
+    [f] = _entry_files(tmp_path)
+    doc = json.loads(f.read_text())
+    doc["choice"]["nodes"] = doc["choice"]["nodes"][:1]  # valid JSON, bogus
+    f.write_text(json.dumps(doc))
+    assert saturate_program(_norm_prog(), cfg).cache_status == "miss"
+
+
+@pytest.mark.parametrize("field", ["format", "extractor_version"])
+def test_version_mismatch_ignored(tmp_path, field):
+    cfg = _cfg(tmp_path)
+    saturate_program(_norm_prog(), cfg)
+    [f] = _entry_files(tmp_path)
+    doc = json.loads(f.read_text())
+    doc[field] = doc.get(field, FORMAT_VERSION) + 1
+    f.write_text(json.dumps(doc))
+    reset_telemetry()
+    assert saturate_program(_norm_prog(), cfg).cache_status == "miss"
+    assert telemetry().snapshot()["cache_invalid"] >= 1
+
+
+def test_concurrent_writers_do_not_clobber(tmp_path):
+    """Many threads racing put() on the same key: atomic tmp+rename
+    means the entry file is always one complete JSON document."""
+    cfg = _cfg(tmp_path)
+    saturate_program(_norm_prog(), cfg)
+    cache = SaturationCache(tmp_path)
+    key = cache_key_for(_norm_prog(), cfg)
+    entry, status = cache.lookup(key)
+    assert status == "hit"
+
+    errors = []
+
+    def writer():
+        try:
+            for _ in range(25):
+                assert cache.put(key, entry)
+                got, st = cache.lookup(key)
+                assert st == "hit" and got["choice"] == entry["choice"]
+        except Exception as e:   # pragma: no cover - failure detail
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    # no half-written temp files left behind
+    assert not list(pathlib.Path(tmp_path).rglob("*.tmp"))
+    assert saturate_program(_norm_prog(), cfg).cache_status == "hit"
+
+
+def test_unwritable_cache_dir_is_nonfatal(tmp_path):
+    """A cache that cannot store (read-only dir) must never break the
+    build — it just stays cold."""
+    ro = tmp_path / "ro"
+    ro.mkdir()
+    os.chmod(ro, 0o555)
+    try:
+        sk = saturate_program(_norm_prog(), _cfg(ro))
+        assert sk.cache_status == "miss"
+        assert sk.kernel.source
+    finally:
+        os.chmod(ro, 0o755)
+
+
+# -- cross-process ----------------------------------------------------------
+_SUB = """
+import hashlib, sys
+from repro.core import SaturatorConfig, saturate_program
+from repro.kernels.tile_programs import PROGRAMS
+cfg = SaturatorConfig(mode="accsat", tpu_rules=True, cost_model="tpu_v5e",
+                      schedule="cost", cache_dir=sys.argv[1])
+sk = saturate_program(PROGRAMS["rmsnorm_gated"](), cfg)
+print("CACHE", sk.cache_status,
+      hashlib.sha256(sk.kernel.source.encode()).hexdigest())
+"""
+
+
+def _run_sub(code, cache_dir, hashseed):
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    env["PYTHONHASHSEED"] = hashseed
+    env.pop("REPRO_SAT_CACHE", None)
+    out = subprocess.run([sys.executable, "-c", code, str(cache_dir)],
+                         env=env, capture_output=True, text=True,
+                         timeout=420)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+@pytest.mark.slow
+def test_cross_process_hit_different_hashseed(tmp_path):
+    """An entry written by one process is an exact, bit-identical hit
+    in another process with a different PYTHONHASHSEED (e-class ids and
+    set-iteration orders differ — nothing id-dependent may leak into
+    the entry)."""
+    first = _run_sub(_SUB, tmp_path, hashseed="3")
+    second = _run_sub(_SUB, tmp_path, hashseed="19")
+    _, st1, sha1 = first.split()
+    _, st2, sha2 = second.split()
+    assert st1 == "miss" and st2 == "hit"
+    assert sha1 == sha2
+
+
+# -- env-var enablement & bridge telemetry ----------------------------------
+def test_env_var_enables_cache(tmp_path, monkeypatch):
+    from repro.core import CACHE_ENV_VAR
+    monkeypatch.setenv(CACHE_ENV_VAR, str(tmp_path))
+    cfg = SaturatorConfig(mode="accsat", tpu_rules=True)
+    assert saturate_program(_norm_prog(), cfg).cache_status == "miss"
+    assert saturate_program(_norm_prog(), cfg).cache_status == "hit"
+
+
+def test_bridge_fallback_is_counted():
+    reset_telemetry()
+
+    def f(x):
+        return jnp.sort(x)
+
+    fn, info = maybe_saturate(f, (jnp.ones((8,), jnp.float32),),
+                              name="sorty")
+    assert info is None and fn is f
+    snap = telemetry().snapshot()
+    # exactly one fallback, attributed to the offending primitive
+    # (jnp.sort stages as a pjit-wrapped call at the top level)
+    assert sum(snap["bridge_fallbacks"].values()) == 1
+    assert any(e.get("fn") == "sorty" for e in telemetry().events)
