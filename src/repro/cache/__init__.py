@@ -25,12 +25,14 @@ from .keys import (EXTRACTOR_VERSION, FORMAT_VERSION, CacheKey,
                    rules_fingerprint, shapes_fingerprint)
 from .serialize import (CacheInvalid, choice_to_doc, graft_choice,
                         orders_from_doc, schedule_to_doc)
-from .store import SaturationCache, make_entry
+from .store import (SaturationCache, default_cache_dir, entry_digest,
+                    make_entry)
 
 __all__ = [
     "EXTRACTOR_VERSION", "FORMAT_VERSION", "CacheKey", "CacheInvalid",
     "SaturationCache", "cache_key_for", "choice_to_doc",
-    "config_fingerprint", "graft_choice", "make_entry", "orders_from_doc",
+    "config_fingerprint", "default_cache_dir", "entry_digest",
+    "graft_choice", "make_entry", "orders_from_doc",
     "program_fingerprint", "rules_fingerprint", "schedule_to_doc",
     "shapes_fingerprint",
 ]

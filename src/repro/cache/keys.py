@@ -39,7 +39,8 @@ from typing import Any, Dict, Optional
 EXTRACTOR_VERSION = 1
 
 # On-disk entry format; bump on incompatible serialization changes.
-FORMAT_VERSION = 1
+# v2: entries carry a mandatory content digest over the sealed fields.
+FORMAT_VERSION = 2
 
 
 def _digest(obj: Any) -> str:
@@ -100,13 +101,23 @@ def rules_fingerprint(config) -> str:
 
 
 def device_profile_id(config) -> Optional[str]:
-    """Stable identifier of the configured device profile (its name /
-    path string), or None for the analytic models."""
+    """Stable identifier of the configured device profile, or None for
+    the analytic models. When the profile resolves, the id is
+    ``<name>@<digest of its fitted parameters>`` — re-fitting a profile
+    under the same file name then changes the key, so entries tuned for
+    stale calibration are not silently replayed. An unresolvable spec
+    (e.g. the profile file is gone) falls back to the name string."""
     prof = config.device_profile
     if prof is None:
         return None
     name = getattr(prof, "name", None)
-    return str(name if name is not None else prof)
+    name = str(name if name is not None else prof)
+    try:
+        from repro.analysis.calibrate import CalibrationError, load_profile
+        params = load_profile(prof).params.to_dict()
+    except (CalibrationError, OSError, ValueError, TypeError):
+        return name
+    return f"{name}@{_digest(params)[:16]}"
 
 
 def config_fingerprint(config) -> str:

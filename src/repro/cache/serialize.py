@@ -111,26 +111,52 @@ def graft_choice(eg, doc: Dict[str, Any], ssa_roots: Sequence[int]
     saturation ran) or the saturated one (warm-start seeding) — either
     way missing nodes are added and the reconstructed roots are unioned
     with ``ssa_roots``. Returns the canonical ``(choice, roots)``.
+
+    Validation is ordered so an invalid entry mutates ``eg`` as little
+    as possible: node structure and payloads are checked before any
+    ``add`` (a ``var`` payload is emitted *verbatim* into exec'd kernel
+    source by codegen, so it must name a variable the e-graph already
+    knows — a cache entry can never introduce new program text), and
+    the choice must cover its own reconstructed roots acyclically
+    *before* the root unions merge any classes. Added-but-unused nodes
+    land in fresh unreachable classes; no equivalence is created until
+    the entry has fully validated.
     """
     try:
         nodes_doc = list(doc["nodes"])
         root_idx = list(doc["roots"])
     except (TypeError, KeyError) as e:
         raise CacheInvalid(f"malformed choice doc: {e}") from e
-    cids: List[int] = []
-    for entry in nodes_doc:
+
+    # pass 1: decode + validate structurally, no e-graph mutation
+    allowed_vars = {n.payload for n in eg.hashcons if n.op == "var"}
+    decoded: List[Tuple[str, List[int], Any]] = []
+    for i, entry in enumerate(nodes_doc):
         try:
             op, ch_idx, payload = entry
+            ch_idx = list(ch_idx)
         except (TypeError, ValueError) as e:
             raise CacheInvalid(f"malformed node {entry!r}") from e
         if not isinstance(op, str):
             raise CacheInvalid(f"bad op {op!r}")
-        try:
-            children = tuple(eg.find(cids[i]) for i in ch_idx)
-        except (IndexError, TypeError) as e:
-            raise CacheInvalid(f"bad child index in {entry!r}") from e
-        cids.append(eg.add(ENode(op, children, _dec_payload(payload))))
+        for j in ch_idx:
+            if not isinstance(j, int) or isinstance(j, bool) \
+                    or not 0 <= j < i:
+                raise CacheInvalid(f"bad child index in {entry!r}")
+        p = _dec_payload(payload)
+        if op == "var" and p not in allowed_vars:
+            raise CacheInvalid(f"var payload {p!r} is not a variable of "
+                               "this kernel (refusing to emit it)")
+        decoded.append((op, ch_idx, p))
 
+    # pass 2: graft (EGraph.add hash-conses; no unions yet)
+    cids: List[int] = []
+    for op, ch_idx, p in decoded:
+        children = tuple(eg.find(cids[j]) for j in ch_idx)
+        cids.append(eg.add(ENode(op, children, p)))
+
+    # pass 3: the choice must stand on its own roots before we union
+    # anything — a failure here leaves roots/equivalences untouched
     ssa_roots = [eg.find(r) for r in ssa_roots]
     try:
         rec_roots = [eg.find(cids[i]) for i in root_idx]
@@ -139,6 +165,19 @@ def graft_choice(eg, doc: Dict[str, Any], ssa_roots: Sequence[int]
     if len(rec_roots) != len(ssa_roots):
         raise CacheInvalid(f"entry has {len(rec_roots)} roots, "
                            f"kernel has {len(ssa_roots)}")
+
+    def _canonical_choice() -> Dict[int, ENode]:
+        out: Dict[int, ENode] = {}
+        for i, (op, ch_idx, p) in enumerate(decoded):
+            children = tuple(eg.find(cids[j]) for j in ch_idx)
+            out.setdefault(eg.find(cids[i]),
+                           eg.canonicalize(ENode(op, children, p)))
+        return out
+
+    if choice_nodes(eg, _canonical_choice(), rec_roots) is None:
+        raise CacheInvalid("reconstructed choice does not cover its own "
+                           "roots acyclically")
+
     changed = False
     for a, b in zip(rec_roots, ssa_roots):
         if eg.find(a) != eg.find(b):
@@ -147,11 +186,7 @@ def graft_choice(eg, doc: Dict[str, Any], ssa_roots: Sequence[int]
     if changed:
         eg.rebuild()
 
-    choice: Dict[int, ENode] = {}
-    for i, (op, ch_idx, payload) in enumerate(nodes_doc):
-        children = tuple(eg.find(cids[j]) for j in ch_idx)
-        node = eg.canonicalize(ENode(op, children, _dec_payload(payload)))
-        choice.setdefault(eg.find(cids[i]), node)
+    choice = _canonical_choice()
     roots = tuple(eg.find(r) for r in ssa_roots)
     if choice_nodes(eg, choice, roots) is None:
         raise CacheInvalid("reconstructed choice does not cover the "

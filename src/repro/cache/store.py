@@ -19,12 +19,26 @@ Robustness contract (exercised by ``tests/test_saturation_cache.py``):
   counted in telemetry), never trusted — the caller falls back to the
   cold path;
 * the full keys are embedded in each entry and re-validated on load, so
-  a truncated-digest filename collision degrades to a miss.
+  a truncated-digest filename collision degrades to a miss;
+* every entry carries a sha256 ``digest`` over its semantic fields
+  (choice, schedule, costs) that is re-verified on load, so corruption
+  that stays valid JSON still degrades to a miss, never a wrong replay.
+
+Trust model: entries are replayed into generated code, so the cache
+root must be private to the user. A root this process creates is made
+``0700``; a pre-existing root is refused (cache silently off, counted
+in telemetry) unless it is a real directory owned by the current uid
+with no group/other write bits — so a world-writable location another
+local user pre-created can never feed us entries. Entry *contents* are
+additionally validated structurally at graft time (see
+:mod:`repro.cache.serialize`).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import stat
 import time
 import uuid
 from pathlib import Path
@@ -37,10 +51,61 @@ from .serialize import CacheInvalid
 
 _DIGEST_CHARS = 24
 
+# The fields an entry's integrity digest seals — everything that feeds
+# replay. Keys/versions are validated separately; cold_report and
+# created_unix are informational.
+_SEALED_FIELDS = ("choice", "schedule", "predicted", "dag_cost",
+                  "tree_cost")
+
+
+def default_cache_dir() -> Path:
+    """User-private default cache location:
+    ``$XDG_CACHE_HOME/repro/sat_cache`` (or ``~/.cache/repro/sat_cache``)
+    — never a shared world-writable directory like ``/tmp``, where any
+    local user could pre-create the path and plant entries."""
+    base = os.environ.get("XDG_CACHE_HOME")
+    root = Path(base) if base else Path.home() / ".cache"
+    return root / "repro" / "sat_cache"
+
+
+def entry_digest(doc: Dict[str, Any]) -> str:
+    """sha256 over the canonical JSON of the entry's sealed fields."""
+    payload = json.dumps([doc.get(k) for k in _SEALED_FIELDS],
+                         sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(payload.encode()).hexdigest()
+
 
 class SaturationCache:
     def __init__(self, root):
         self.root = Path(root)
+        self._usable: Optional[bool] = None
+
+    # -- root trust ----------------------------------------------------------
+    def _root_usable(self) -> bool:
+        """Create-or-verify the cache root. A root we create is 0700;
+        a pre-existing one must be a non-symlink directory owned by the
+        current uid with no group/other write permission. Anything else
+        disables the cache for this instance (recorded once)."""
+        if self._usable is not None:
+            return self._usable
+        try:
+            os.makedirs(self.root, mode=0o700, exist_ok=True)
+            st = os.stat(self.root, follow_symlinks=False)
+            if not stat.S_ISDIR(st.st_mode):
+                raise OSError(f"{self.root} is not a directory")
+            if hasattr(os, "getuid") and st.st_uid != os.getuid():
+                raise OSError(f"{self.root} is owned by uid {st.st_uid}, "
+                              f"not {os.getuid()}")
+            if st.st_mode & (stat.S_IWGRP | stat.S_IWOTH):
+                raise OSError(f"{self.root} is group/other-writable "
+                              f"(mode {stat.S_IMODE(st.st_mode):o})")
+        except OSError as e:
+            telemetry().record_invalid(
+                "<root>", f"untrusted cache root, cache disabled: {e}")
+            self._usable = False
+            return False
+        self._usable = True
+        return True
 
     # -- paths --------------------------------------------------------------
     def _warm_dir(self, key: CacheKey) -> Path:
@@ -75,12 +140,17 @@ class SaturationCache:
             raise CacheInvalid("exact-key mismatch")
         if "choice" not in doc:
             raise CacheInvalid("entry has no choice")
+        if doc.get("digest") != entry_digest(doc):
+            raise CacheInvalid("content digest mismatch (corrupt or "
+                               "tampered entry)")
         return doc
 
     def lookup(self, key: CacheKey
                ) -> Tuple[Optional[Dict[str, Any]], str]:
         """Returns ``(entry, status)`` with status in
         ``{"hit", "warm", "miss"}``; entry is None on a miss."""
+        if not self._root_usable():
+            return None, "miss"
         exact = self._entry_path(key)
         if exact.is_file():
             try:
@@ -101,16 +171,22 @@ class SaturationCache:
     # -- store ---------------------------------------------------------------
     def put(self, key: CacheKey, entry: Dict[str, Any]) -> bool:
         """Atomically persist ``entry``; False on filesystem trouble
-        (caching is best-effort, never fatal)."""
+        (caching is best-effort, never fatal). The entry is stamped with
+        its content digest so ``_load`` can detect corruption that stays
+        valid JSON."""
+        if not self._root_usable():
+            return False
         path = self._entry_path(key)
         tmp = path.with_name(
             f".{path.stem}.{os.getpid()}.{uuid.uuid4().hex[:8]}.tmp")
         try:
+            entry = dict(entry)
+            entry["digest"] = entry_digest(entry)
             path.parent.mkdir(parents=True, exist_ok=True)
             with open(tmp, "w", encoding="utf-8") as f:
                 json.dump(entry, f, sort_keys=True, separators=(",", ":"))
             os.replace(tmp, path)   # atomic: readers see old or new, whole
-        except OSError:
+        except (OSError, TypeError, ValueError):
             try:
                 tmp.unlink(missing_ok=True)
             except OSError:

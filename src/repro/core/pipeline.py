@@ -423,6 +423,19 @@ def saturate_program(prog: KernelProgram,
         except CacheInvalid as e:
             telemetry().record_invalid(prog.name, str(e))
             status = "miss"
+            seed_choices = seed_order_keys = None
+            # the failed graft may have mutated the saturated e-graph
+            # (grafted nodes, possibly root unions) before validation
+            # tripped — rebuild and re-saturate so the cold search never
+            # runs on a graph a bad entry touched (mirrors the exact-hit
+            # fallback's fresh build_ssa)
+            ssa = build_ssa(prog)
+            if cfg.use_sat:
+                sat_report = run_rules(ssa.egraph, cfg.rules(),
+                                       iter_limit=cfg.iter_limit,
+                                       node_limit=cfg.node_limit,
+                                       time_limit_s=cfg.time_limit_s)
+            roots = ssa.roots()
     extraction = extract_dag(
         ssa.egraph, tuple(roots) if roots else (),
         cost_model=cm,

@@ -17,7 +17,13 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Any, Dict, List
+from collections import deque
+from typing import Any, Deque, Dict
+
+# Retained event dicts are a debugging aid, not the record of truth (the
+# counters are); cap them so a long-lived serve/train process with
+# recurring bridge fallbacks or cache lookups doesn't leak memory.
+EVENT_LIMIT = 512
 
 
 @dataclasses.dataclass
@@ -33,7 +39,8 @@ class SaturationTelemetry:
     hit_wall_s: float = 0.0        # replay-only wall time on exact hits
     bridge_fallbacks: Dict[str, int] = dataclasses.field(
         default_factory=dict)  # primitive name -> count
-    events: List[Dict[str, Any]] = dataclasses.field(default_factory=list)
+    events: Deque[Dict[str, Any]] = dataclasses.field(
+        default_factory=lambda: deque(maxlen=EVENT_LIMIT))
 
     def __post_init__(self):
         self._lock = threading.Lock()

@@ -27,10 +27,14 @@ from repro.core.telemetry import telemetry
 from repro.kernels import ops
 from repro.models import get_model
 
+from repro.cache import default_cache_dir
+
 # Default persistent saturation-cache location for the serving CLI: the
 # decode hot path pays beam-search cost once per kernel shape across
-# boots, not once per process (disable with --no-cache).
-DEFAULT_CACHE_DIR = "/tmp/repro_sat_cache"
+# boots, not once per process (disable with --no-cache). User-private
+# ($XDG_CACHE_HOME/repro/sat_cache) — cached entries are replayed into
+# generated code, so the directory must not be writable by other users.
+DEFAULT_CACHE_DIR = str(default_cache_dir())
 
 
 @dataclasses.dataclass

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache import default_cache_dir
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.core.telemetry import telemetry
 from repro.data import DataConfig, ShardedTokenPipeline
@@ -104,8 +105,9 @@ def main(argv=None):
                     choices=["none", "bf16", "int8", "int8_ef"])
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
     ap.add_argument("--inject-failure-at", type=int, default=None)
-    ap.add_argument("--cache-dir", default="/tmp/repro_sat_cache",
-                    help="persistent saturation cache directory")
+    ap.add_argument("--cache-dir", default=str(default_cache_dir()),
+                    help="persistent saturation cache directory "
+                         "(user-private by default)")
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the on-disk saturation cache")
     args = ap.parse_args(argv)

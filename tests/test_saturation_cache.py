@@ -4,6 +4,7 @@ telemetry the launch drivers surface."""
 import json
 import os
 import pathlib
+import stat
 import subprocess
 import sys
 import threading
@@ -14,7 +15,8 @@ import pytest
 from repro.core import (KernelProgram, SaturatorConfig, maybe_saturate,
                         reset_telemetry, rmean, rsqrt, saturate_program,
                         telemetry)
-from repro.cache import (FORMAT_VERSION, SaturationCache, cache_key_for)
+from repro.cache import (FORMAT_VERSION, SaturationCache, cache_key_for,
+                         entry_digest)
 
 
 def _norm_prog(tile=(8, 128)):
@@ -198,6 +200,120 @@ def test_concurrent_writers_do_not_clobber(tmp_path):
     # no half-written temp files left behind
     assert not list(pathlib.Path(tmp_path).rglob("*.tmp"))
     assert saturate_program(_norm_prog(), cfg).cache_status == "hit"
+
+
+def test_bitflip_entry_falls_back_cold(tmp_path):
+    """Corruption that stays valid JSON (a mutated sealed field, stale
+    stored digest) is caught by the content digest and never replayed
+    as a semantically different kernel."""
+    cfg = _cfg(tmp_path)
+    cold = saturate_program(_norm_prog(), cfg)
+    [f] = _entry_files(tmp_path)
+    doc = json.loads(f.read_text())
+    doc["dag_cost"] = float(doc["dag_cost"]) + 1.0   # digest left stale
+    f.write_text(json.dumps(doc))
+    reset_telemetry()
+    again = saturate_program(_norm_prog(), cfg)
+    assert again.cache_status == "miss"
+    assert again.kernel.source == cold.kernel.source
+    assert any("digest" in e.get("reason", "")
+               for e in telemetry().events)
+
+
+def test_var_payload_injection_rejected(tmp_path):
+    """codegen emits 'var' payloads verbatim into exec'd source, so a
+    crafted entry (with a *valid* digest — the digest is integrity, not
+    authentication) must be refused at graft time when its var payload
+    is not a variable of the kernel."""
+    cfg = _cfg(tmp_path)
+    cold = saturate_program(_norm_prog(), cfg)
+    [f] = _entry_files(tmp_path)
+    doc = json.loads(f.read_text())
+    planted = False
+    for node in doc["choice"]["nodes"]:
+        if node[0] == "var":
+            node[2] = ["str", "__import__('os').getpid()"]
+            planted = True
+            break
+    assert planted, "expected a var node (eps) in the cached choice"
+    doc["digest"] = entry_digest(doc)
+    f.write_text(json.dumps(doc))
+    reset_telemetry()
+    again = saturate_program(_norm_prog(), cfg)
+    assert again.cache_status == "miss"
+    assert again.kernel.source == cold.kernel.source
+    assert "__import__" not in again.kernel.source
+    assert any("not a variable" in e.get("reason", "")
+               for e in telemetry().events)
+
+
+def test_world_writable_root_disables_cache(tmp_path):
+    """A pre-existing group/other-writable cache root (another local
+    user could have planted entries) is refused: the cache silently
+    stays off — no reads, no writes, build still works."""
+    shared = tmp_path / "shared"
+    shared.mkdir()
+    os.chmod(shared, 0o777)
+    reset_telemetry()
+    cfg = _cfg(shared)
+    assert saturate_program(_norm_prog(), cfg).cache_status == "miss"
+    assert saturate_program(_norm_prog(), cfg).cache_status == "miss"
+    assert not _entry_files(shared)
+    assert telemetry().snapshot()["cache_invalid"] >= 1
+
+
+def test_fresh_root_is_created_private(tmp_path):
+    root = tmp_path / "newdir"
+    saturate_program(_norm_prog(), _cfg(root))
+    assert stat.S_IMODE(os.stat(root).st_mode) == 0o700
+    assert saturate_program(_norm_prog(), _cfg(root)).cache_status == "hit"
+
+
+def test_warm_graft_failure_falls_back_clean(tmp_path):
+    """A digest-valid entry whose schedule cannot graft must not poison
+    the warm path: the pipeline rebuilds + re-saturates and produces
+    exactly what a cache-less cold build produces."""
+    cfg = _cfg(tmp_path, schedule="cost")
+    saturate_program(_norm_prog((8, 128)), cfg)
+    [f] = _entry_files(tmp_path)
+    doc = json.loads(f.read_text())
+    path_key = next(iter(doc["schedule"]["orders"]))
+    doc["schedule"]["orders"][path_key][0] = ["bogus", 0]
+    doc["digest"] = entry_digest(doc)
+    f.write_text(json.dumps(doc))
+    reset_telemetry()
+    poisoned = saturate_program(_norm_prog((16, 128)), cfg)
+    assert poisoned.cache_status == "miss"
+    assert telemetry().snapshot()["cache_invalid"] >= 1
+    nocache = saturate_program(
+        _norm_prog((16, 128)),
+        SaturatorConfig(mode="accsat", tpu_rules=True,
+                        cost_model="tpu_v5e", schedule="cost"))
+    assert poisoned.kernel.source == nocache.kernel.source
+
+
+def test_profile_refit_invalidates_key(tmp_path):
+    """Re-fitting a device profile under the same file name changes the
+    fitted-params digest in the key, so entries tuned for the stale
+    calibration are not replayed."""
+    from repro.analysis.calibrate import CalibrationParams, DeviceProfile
+    prof_path = tmp_path / "prof.json"
+
+    def save(base_ns):
+        DeviceProfile(name="prof", chip="cpu", measured_kind="test",
+                      params=CalibrationParams(base_ns=base_ns)
+                      ).save(prof_path)
+
+    save(0.0)
+    cfg = SaturatorConfig(mode="accsat", cost_model="roofline",
+                          device_profile=str(prof_path),
+                          cache_dir=str(tmp_path / "c"))
+    k1 = cache_key_for(_norm_prog(), cfg)
+    assert cache_key_for(_norm_prog(), cfg).warm_key == k1.warm_key
+    save(5.0)
+    k2 = cache_key_for(_norm_prog(), cfg)
+    assert k1.warm_key != k2.warm_key
+    assert "@" in str(k2.components["device_profile"])
 
 
 def test_unwritable_cache_dir_is_nonfatal(tmp_path):
