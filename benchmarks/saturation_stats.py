@@ -17,12 +17,14 @@ On e-graphs small enough to enumerate, the brute-force oracle
 from __future__ import annotations
 
 import statistics
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 from repro.core import (SaturatorConfig, compute_schedule, extract_dag,
                         optimality_gap, saturate_program)
 from repro.core.pipeline import predict_choice
 from repro.kernels.tile_programs import PROGRAMS
+from repro.verify import (VerifyReport, verify_rules, verify_saturated,
+                          verify_schedule)
 from .kernel_suite import SUITE
 
 # Deterministic-run limits for the regression gate: generous wall-clock
@@ -32,7 +34,7 @@ GATE_CONFIG = dict(mode="accsat", time_limit_s=120.0,
                    extract_time_limit_s=120.0)
 
 
-def all_programs() -> Dict[str, callable]:
+def all_programs() -> Dict[str, Callable]:
     return {**{k: v for k, v in SUITE.items()},
             **{f"tile:{k}": v for k, v in PROGRAMS.items()}}
 
@@ -58,6 +60,7 @@ def _hillclimb_prediction(sk, cfg) -> Dict:
 def run_saturation_stats(compare_hillclimb: bool = True,
                          oracle_max_classes: int = 12) -> Dict:
     rows: List[Dict] = []
+    agg_verify = VerifyReport()
     for name, mk in all_programs().items():
         sk = saturate_program(mk(), SaturatorConfig(**GATE_CONFIG))
         rep = sk.report()
@@ -101,12 +104,30 @@ def run_saturation_stats(compare_hillclimb: bool = True,
             row["beam_vs_hillclimb_pct"] = (
                 100.0 * (rep["predicted_latency_ns"] - hill["latency_ns"])
                 / hill["latency_ns"] if hill["latency_ns"] else 0.0)
+        # PR-7 static verification: e-graph invariants, emitted-source
+        # lint, plus independent certification of the cost order priced
+        # above — per-kernel digest in the row, aggregates at top level
+        vrep = verify_saturated(sk, "cheap")
+        scr = verify_schedule(sk.ssa, sk.extraction.choice, sched)
+        vrep.extend(scr.findings)
+        vrep.schedules_certified += scr.regions_certified
+        agg_verify.merge(vrep)
+        row["verify"] = vrep.summary()
         rows.append(row)
+    # rule soundness is per-rule-set, not per-kernel: validate the gate
+    # configuration's active rules once
+    rres = verify_rules(SaturatorConfig(**GATE_CONFIG).rules())
+    agg_verify.extend(rres.findings)
+    agg_verify.rules_checked += rres.rules_checked
     ssa_ms = [r["ssa_codegen_ms"] for r in rows]
     sat_s = [r["saturation_s"] for r in rows]
     from repro.core.telemetry import telemetry
     return {
         "rows": rows,
+        "verify": agg_verify.summary(),
+        "verify_findings_by_pass": agg_verify.by_pass(),
+        "rules_checked": agg_verify.rules_checked,
+        "schedules_certified": agg_verify.schedules_certified,
         # PR-6 runtime counters: persistent-cache hits/misses/warm starts
         # and per-primitive jaxpr-bridge fallbacks observed this process
         "telemetry": telemetry().snapshot(),

@@ -262,6 +262,23 @@ class EGraph:
             for node in list(self.classes[self.find(cid)].nodes):
                 self._analyze_node(self.find(cid), self.canonicalize(node))
 
+    # -- invariant checking ------------------------------------------------------
+    def check_invariants(self, *, strict: bool = False) -> list:
+        """Static invariant audit (repro.verify pass 2): union-find
+        structure, hashcons/congruence closure, const-fold and ainfo
+        analysis consistency. Returns the findings; with ``strict=True``
+        raises AssertionError on any error-severity finding — the form
+        tests call after run_rules and after a cache graft."""
+        from repro.verify.egraph_check import check_egraph
+        findings = check_egraph(self)
+        if strict:
+            errors = [f for f in findings if f.severity == "error"]
+            if errors:
+                raise AssertionError(
+                    "e-graph invariants violated:\n  " +
+                    "\n  ".join(str(f) for f in errors))
+        return findings
+
     # -- iteration ---------------------------------------------------------------
     def eclasses(self) -> Dict[int, EClass]:
         """Canonical (root) classes only."""

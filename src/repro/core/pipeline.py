@@ -93,6 +93,12 @@ class SaturatorConfig:
     # other shapes) seeds the searches when cache_warm_start is on.
     cache_dir: Optional[Any] = None
     cache_warm_start: bool = True
+    # Static verification (repro.verify): "off" adds zero overhead,
+    # "cheap" audits the e-graph + certifies the attached schedule +
+    # lints the emitted source on every build (cold and cached replay),
+    # "full" additionally certifies reconstructed legacy orders and
+    # differentially re-validates the active rule set.
+    verify: str = "off"
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -108,6 +114,10 @@ class SaturatorConfig:
                 self.schedule not in SCHEDULE_MODES:
             raise ValueError(f"schedule must be one of {SCHEDULE_MODES}, "
                              f"got {self.schedule}")
+        from repro.verify import VERIFY_LEVELS
+        if self.verify not in VERIFY_LEVELS:
+            raise ValueError(f"verify must be one of {VERIFY_LEVELS}, "
+                             f"got {self.verify}")
 
     @property
     def schedule_mode(self) -> str:
@@ -180,6 +190,8 @@ class SaturatedKernel:
     # (cold search, result stored), "warm" (searches seeded from a
     # near-miss entry), "hit" (replayed with no search at all)
     cache_status: str = "off"
+    # static-verification report (repro.verify) when config.verify != "off"
+    verify_report: Optional[Any] = None
 
     @property
     def fn(self) -> Callable:
@@ -232,6 +244,8 @@ class SaturatedKernel:
             "sat_s": self.saturation.wall_s if self.saturation else 0.0,
             "extract_s": self.extraction.wall_s,
             "codegen_ms": self.codegen_wall_s * 1e3,
+            "verify": (self.verify_report.summary()
+                       if self.verify_report is not None else None),
         }
 
 
@@ -276,6 +290,15 @@ def _schedule_cm(cfg: SaturatorConfig, prog, eg):
     if hasattr(cm, "bind_egraph"):
         cm.bind_egraph(eg)
     return cm
+
+
+def _maybe_verify(sk: SaturatedKernel) -> SaturatedKernel:
+    """Run the static verifier when configured ("off" = no work at all,
+    keeping the cache warm-hit path overhead-free)."""
+    if sk.config.verify != "off":
+        from repro.verify import verify_saturated
+        sk.verify_report = verify_saturated(sk)
+    return sk
 
 
 def _replay_cached(prog, cfg: SaturatorConfig, ssa: SSAResult,
@@ -333,10 +356,11 @@ def _replay_cached(prog, cfg: SaturatorConfig, ssa: SSAResult,
                                if cfg.cost_model == "roofline" else None)
     if predicted is not None:
         extraction.predicted = predicted
-    return SaturatedKernel(kernel=gen, ssa=ssa, extraction=extraction,
-                           saturation=None, config=cfg,
-                           ssa_wall_s=ssa_wall, codegen_wall_s=codegen_wall,
-                           cache_status="hit")
+    return _maybe_verify(SaturatedKernel(
+        kernel=gen, ssa=ssa, extraction=extraction,
+        saturation=None, config=cfg,
+        ssa_wall_s=ssa_wall, codegen_wall_s=codegen_wall,
+        cache_status="hit"))
 
 
 def _store_entry(cache, key, cfg: SaturatorConfig, prog,
@@ -485,7 +509,7 @@ def saturate_program(prog: KernelProgram,
                                  prog.name,
                                  time.perf_counter() - t_begin)
         _store_entry(cache, key, cfg, prog, sk)
-    return sk
+    return _maybe_verify(sk)
 
 
 def saturate_all_modes(prog: KernelProgram, base: Optional[SaturatorConfig]

@@ -39,6 +39,13 @@ class SaturationTelemetry:
     hit_wall_s: float = 0.0        # replay-only wall time on exact hits
     bridge_fallbacks: Dict[str, int] = dataclasses.field(
         default_factory=dict)  # primitive name -> count
+    # static-verification counters (repro.verify, PR 7)
+    verify_runs: int = 0
+    verify_errors: int = 0
+    verify_findings_by_pass: Dict[str, int] = dataclasses.field(
+        default_factory=dict)   # pass name -> finding count
+    rules_checked: int = 0
+    schedules_certified: int = 0
     events: Deque[Dict[str, Any]] = dataclasses.field(
         default_factory=lambda: deque(maxlen=EVENT_LIMIT))
 
@@ -79,6 +86,23 @@ class SaturationTelemetry:
             self.events.append({"kind": "bridge_fallback",
                                 "primitive": primitive, "fn": fn_name})
 
+    # -- verification events ------------------------------------------------
+    def record_verify(self, report):
+        """Fold one :class:`repro.verify.VerifyReport` into the counters."""
+        with self._lock:
+            self.verify_runs += 1
+            for f in report.findings:
+                self.verify_findings_by_pass[f.pass_name] = \
+                    self.verify_findings_by_pass.get(f.pass_name, 0) + 1
+                if f.severity == "error":
+                    self.verify_errors += 1
+            self.rules_checked += report.rules_checked
+            self.schedules_certified += report.schedules_certified
+            if not report.ok:
+                self.events.append({"kind": "verify_errors",
+                                    "errors": [str(f) for f
+                                               in report.errors()][:8]})
+
     # -- reporting ----------------------------------------------------------
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
@@ -97,6 +121,14 @@ class SaturationTelemetry:
                 "hit_wall_s": self.hit_wall_s,
                 "bridge_fallbacks": dict(sorted(
                     self.bridge_fallbacks.items())),
+                "verify": {
+                    "runs": self.verify_runs,
+                    "errors": self.verify_errors,
+                    "findings_by_pass": dict(sorted(
+                        self.verify_findings_by_pass.items())),
+                    "rules_checked": self.rules_checked,
+                    "schedules_certified": self.schedules_certified,
+                },
             }
 
     def reset(self):
@@ -106,6 +138,9 @@ class SaturationTelemetry:
             self.cache_invalid = 0
             self.cold_wall_s = self.warm_wall_s = self.hit_wall_s = 0.0
             self.bridge_fallbacks.clear()
+            self.verify_runs = self.verify_errors = 0
+            self.verify_findings_by_pass.clear()
+            self.rules_checked = self.schedules_certified = 0
             self.events.clear()
 
 

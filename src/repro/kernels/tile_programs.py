@@ -11,7 +11,7 @@ on FMA opportunities, shared subexpressions, and front-loadable loads.
 from __future__ import annotations
 
 import functools
-from typing import Dict
+from typing import Callable, Dict
 
 from repro.core import (KernelProgram, SaturatorConfig, c, gelu_tanh, log,
                         make_tile_op, exp, recip, rmax, rmean, rothalf,
@@ -218,7 +218,7 @@ def l2_clip_program() -> KernelProgram:
     return p
 
 
-PROGRAMS: Dict[str, callable] = {
+PROGRAMS: Dict[str, Callable[[], KernelProgram]] = {
     "rmsnorm": rmsnorm_program,
     "rmsnorm_gated": rmsnorm_gated_program,
     "layernorm": layernorm_program,

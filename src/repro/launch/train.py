@@ -130,6 +130,11 @@ def main(argv=None):
     print(f"  saturation cache: hits={sat['cache_hits']} "
           f"warm={sat['cache_warm_starts']} misses={sat['cache_misses']} "
           f"bridge_fallbacks={sum(sat['bridge_fallbacks'].values())}")
+    ver = sat["verify"]
+    print(f"  verify: runs={ver['runs']} errors={ver['errors']} "
+          f"rules_checked={ver['rules_checked']} "
+          f"schedules_certified={ver['schedules_certified']} "
+          f"findings_by_pass={ver['findings_by_pass']}")
     assert losses[-1] < losses[0], "training did not reduce loss"
     return out
 

@@ -117,6 +117,36 @@ def test_rebuild_idempotent_and_canonical(seed):
             eg.find(eg.hashcons[eg.canonicalize(node)]) == eg.find(cid)
 
 
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_invariants_hold_after_saturation(seed):
+    """PR 7: the full invariant audit (union-find, hashcons/congruence
+    closure, analysis consistency) passes after run_rules + rebuild."""
+    rng = np.random.default_rng(seed)
+    eg = EGraph()
+    for _ in range(3):
+        add_expr(eg, random_term(rng, depth=3))
+    run_rules(eg, PAPER_RULES, iter_limit=5, node_limit=2500)
+    eg.rebuild()
+    eg.check_invariants(strict=True)
+
+
+def test_invariants_detect_cross_class_congruence():
+    """Two congruent nodes planted in distinct classes must be caught."""
+    eg = EGraph()
+    a = add_expr(eg, ("var", "a"))
+    b = add_expr(eg, ("var", "b"))
+    n1 = add_expr(eg, ("add", ("var", "a"), ("var", "b")))
+    # duplicate add(a,b) directly into b's class behind the union-find's
+    # back — exactly what a buggy rebuild would leave behind
+    dup = ENode("add", (a, b))
+    eg.classes[eg.find(b)].nodes.add(dup)
+    findings = eg.check_invariants()
+    codes = {f.code for f in findings if f.severity == "error"}
+    assert codes & {"congruence-violation", "member-maps-elsewhere"}, codes
+    assert n1 is not None
+
+
 def test_node_limit_respected():
     eg = EGraph()
     t = ("add", ("var", "a"), ("var", "b"))

@@ -61,6 +61,8 @@ def test_exact_hit_bit_identical_and_skips_search(tmp_path, schedule):
     assert hit.extraction.search == "cache"  # beam/hillclimb never ran
     assert hit.kernel.source == cold.kernel.source
     assert hit.report()["sat_stop"] == "cached"
+    # PR 7: grafting the cached choice must leave a consistent e-graph
+    hit.ssa.egraph.check_invariants(strict=True)
 
 
 def test_hit_and_miss_telemetry(tmp_path):
@@ -96,9 +98,28 @@ def test_warm_start_on_shape_change(tmp_path):
     assert saturate_program(_norm_prog((8, 128)), cfg).cache_status == "miss"
     warm = saturate_program(_norm_prog((16, 128)), cfg)
     assert warm.cache_status == "warm"
+    # PR 7: the warm graft (cached choice unioned into the saturated
+    # e-graph) must leave every invariant intact
+    warm.ssa.egraph.check_invariants(strict=True)
     hit = saturate_program(_norm_prog((16, 128)), cfg)
     assert hit.cache_status == "hit"
     assert hit.kernel.source == warm.kernel.source
+
+
+def test_hit_path_verified_when_enabled(tmp_path):
+    """PR 7: verify="cheap" audits the replayed build too (invariants,
+    certified cached order, emitted source) — and stays off the key, so
+    verified and unverified builds share entries."""
+    cfg = _cfg(tmp_path, schedule="cost", verify="cheap")
+    cold = saturate_program(_norm_prog(), cfg)
+    assert cold.verify_report is not None and cold.verify_report.ok
+    hit = saturate_program(_norm_prog(), cfg)
+    assert hit.cache_status == "hit"       # verify didn't change the key
+    assert hit.verify_report is not None and hit.verify_report.ok
+    assert hit.verify_report.schedules_certified >= 1
+    off = saturate_program(_norm_prog(), _cfg(tmp_path, schedule="cost"))
+    assert off.cache_status == "hit"
+    assert off.verify_report is None       # off = no verification work
 
 
 def test_warm_start_can_be_disabled(tmp_path):

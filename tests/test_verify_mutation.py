@@ -1,0 +1,148 @@
+"""Mutation tests for the static verifier (PR 7 satellite): seed one
+unsound rule, one illegal statement order, and one out-of-bounds index,
+and require each pass to report *exactly that* finding — no false
+silence on the defect, no false alarms on the clean artifact."""
+import copy
+
+import pytest
+
+from repro.core import (KernelProgram, SaturatorConfig, compute_schedule,
+                        rmean, rsqrt, saturate_program)
+from repro.core.egraph import P, V
+from repro.core.rules import (EXTENDED_RULES, PAPER_RULES, TPU_RULES, Rule)
+from repro.verify import (check_generated, shapes_of, verify_rules,
+                          verify_schedule)
+
+A, B = V("a"), V("b")
+
+
+def _rms_prog():
+    p = KernelProgram("mut_rms")
+    x = p.array_in("x", shape=(8, 128))
+    g = p.array_in("g", shape=(1, 128))
+    p.array_out("o", shape=(8, 128))
+    eps = p.scalar("eps")
+    xv = x.load()
+    p.store("o", xv * rsqrt(rmean(xv * xv) + eps) * g.load())
+    return p
+
+
+# -- defect 1: unsound rule ---------------------------------------------------
+def test_seeded_unsound_rule_caught_exactly():
+    bad = Rule("BAD-ADDSUB", P("add", A, B), P("sub", A, B))
+    res = verify_rules([bad])
+    errs = [f for f in res.findings if f.severity == "error"]
+    assert len(errs) == 1
+    assert errs[0].code == "unsound-rule" and errs[0].subject == "BAD-ADDSUB"
+    # the defect is caught on the first (ordinary-math) tier: add vs sub
+    # differ at O(1) on well-conditioned inputs
+    assert "random" in errs[0].message
+
+
+def test_seeded_rule_among_clean_suite_is_the_only_finding():
+    bad = Rule("BAD-MULDIV", P("mul", A, B), P("div", A, B))
+    res = verify_rules(list(PAPER_RULES) + [bad] + list(TPU_RULES))
+    errs = [f for f in res.findings if f.severity == "error"]
+    assert [f.subject for f in errs] == ["BAD-MULDIV"]
+
+
+# -- defect 2: illegal statement order ---------------------------------------
+@pytest.fixture(scope="module")
+def rms_build():
+    prog = _rms_prog()
+    sk = saturate_program(prog, SaturatorConfig(mode="accsat"))
+    sched = compute_schedule(sk.ssa, dict(sk.extraction.choice),
+                             mode="source", move_budget=0)
+    return sk, sched
+
+
+def test_legal_order_certifies_clean(rms_build):
+    sk, sched = rms_build
+    res = verify_schedule(sk.ssa, sk.extraction.choice, sched)
+    assert res.ok, [str(f) for f in res.findings]
+    assert res.regions_certified == res.regions_checked > 0
+
+
+def test_seeded_illegal_order_caught_exactly(rms_build):
+    """Swapping one dependent (producer, consumer) adjacent pair must
+    produce exactly one illegal-order error — the misplaced consumer."""
+    sk, sched = rms_build
+    base_order = list(sched.regions[()].order)
+    seen_exact = 0
+    for i in range(len(base_order) - 1):
+        mut = copy.deepcopy(sched)
+        o = mut.regions[()].order
+        o[i], o[i + 1] = o[i + 1], o[i]
+        res = verify_schedule(sk.ssa, sk.extraction.choice, mut)
+        errs = [f for f in res.findings if f.severity == "error"]
+        if errs:
+            # an adjacent swap can only break the swapped consumer
+            assert len(errs) == 1
+            assert errs[0].code == "illegal-order"
+            seen_exact += 1
+    # the source order of this kernel has at least one adjacent
+    # dependent pair (each load feeds the next compute)
+    assert seen_exact >= 1
+
+
+def test_dropped_unit_caught(rms_build):
+    sk, sched = rms_build
+    mut = copy.deepcopy(sched)
+    rs = mut.regions[()]
+    rs.order = [u for u in rs.order[:-1]]
+    res = verify_schedule(sk.ssa, sk.extraction.choice, mut)
+    assert [f.code for f in res.findings] == ["not-a-permutation"]
+
+
+# -- defect 3: out-of-bounds index -------------------------------------------
+def _oob_prog():
+    p = KernelProgram("mut_oob")
+    x = p.array_in("x", shape=(8, 128))
+    p.array_out("o", shape=(8, 128))
+    p.store("o", x[999, 0] + x.load())   # row 999 of an 8-row tile
+    return p
+
+
+def test_seeded_oob_index_caught_exactly():
+    prog = _oob_prog()
+    sk = saturate_program(prog, SaturatorConfig(mode="accsat"))
+    findings = check_generated(sk.kernel.source, shapes_of(prog))
+    errs = [f for f in findings if f.severity == "error"]
+    assert len(errs) == 1
+    assert errs[0].code == "oob-index"
+    assert "999" in errs[0].message and "extent 8" in errs[0].message
+
+
+def test_clean_kernels_no_codegen_errors():
+    for mk in (_rms_prog, ):
+        prog = mk()
+        sk = saturate_program(prog, SaturatorConfig(mode="accsat"))
+        findings = check_generated(sk.kernel.source, shapes_of(prog))
+        assert not [f for f in findings if f.severity == "error"], \
+            [str(f) for f in findings]
+
+
+# -- defect 4 (bonus): corrupted e-graph -------------------------------------
+def test_corrupted_union_find_caught():
+    from repro.core.egraph import EGraph, add_expr
+    eg = EGraph()
+    add_expr(eg, ("add", ("var", "a"), ("mul", ("var", "b"), ("var", "c"))))
+    assert not [f for f in eg.check_invariants()
+                if f.severity == "error"]
+    # point two roots at each other: a union-find cycle
+    eg.uf.parent[0] = 1
+    eg.uf.parent[1] = 0
+    findings = eg.check_invariants()
+    assert any(f.code == "uf-cycle" for f in findings)
+    with pytest.raises(AssertionError):
+        eg.check_invariants(strict=True)
+
+
+def test_stale_hashcons_caught():
+    from repro.core.egraph import EGraph, add_expr
+    eg = EGraph()
+    add_expr(eg, ("add", ("var", "a"), ("var", "b")))
+    node = next(iter(eg.hashcons))
+    eg.hashcons[node] = len(eg.uf.parent) + 7   # out-of-range class id
+    assert any(f.code == "hashcons-out-of-range"
+               for f in eg.check_invariants())

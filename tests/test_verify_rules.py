@@ -1,0 +1,111 @@
+"""Rule-soundness pass (PR 7): the built-in rule sets are clean, the
+finite-math gates are documented info notes, and the structural lint
+catches malformed rules."""
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.egraph import P, V
+from repro.core.rules import (EXTENDED_RULES, PAPER_RULES, TPU_RULES, Rule)
+from repro.verify import verify_rules
+
+A, B, C = V("a"), V("b"), V("c")
+
+
+# -- clean suites ------------------------------------------------------------
+@pytest.mark.parametrize("rules", [PAPER_RULES, EXTENDED_RULES, TPU_RULES],
+                         ids=["paper", "extended", "tpu"])
+def test_builtin_rules_zero_errors(rules):
+    res = verify_rules(rules)
+    assert res.rules_checked == len(rules)
+    errors = [f for f in res.findings if f.severity == "error"]
+    assert errors == [], [str(f) for f in errors]
+
+
+def test_finite_math_rules_are_gated_info():
+    """The reassociation and div<->recip rules fail the adversarial tier
+    (overflow / denormal divisors) but carry the documented
+    finite_math=True gate — reported as info, never error."""
+    res = verify_rules(PAPER_RULES + EXTENDED_RULES)
+    gated = {f.subject for f in res.findings
+             if f.code == "finite-math-gated"}
+    assert {"ASSOC-ADD1", "ASSOC-ADD2", "ASSOC-MUL1",
+            "ASSOC-MUL2"} <= gated
+    assert {"DIV-AS-RECIP", "RECIP-AS-DIV"} <= gated
+    for f in res.findings:
+        if f.code == "finite-math-gated":
+            assert f.severity == "info"
+    # exact-value rules must not need the gate
+    flagged = {r.name for r in PAPER_RULES + EXTENDED_RULES
+               if r.finite_math}
+    assert "COMM-ADD" not in flagged and "FMA1" not in flagged
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 100_000))
+def test_extended_rules_sound_across_seeds(seed):
+    """Satellite: differential validation of EXTENDED_RULES under the
+    (shimmed) hypothesis sweep — sound at every seed, not just seed 0."""
+    res = verify_rules(EXTENDED_RULES, n_random=16, seed=seed)
+    assert not [f for f in res.findings if f.severity == "error"]
+
+
+def test_deterministic_across_runs():
+    a = verify_rules(PAPER_RULES)
+    b = verify_rules(PAPER_RULES)
+    assert [str(f) for f in a.findings] == [str(f) for f in b.findings]
+
+
+def test_every_evaluable_rule_checked_under_envs():
+    res = verify_rules(PAPER_RULES)
+    for rec in res.records:
+        assert rec.envs_checked > 0, rec.name
+
+
+# -- structural lint ---------------------------------------------------------
+def test_lint_unbound_rhs_var():
+    res = verify_rules([Rule("UNBOUND", P("add", A, B), P("add", A, C))])
+    codes = [f.code for f in res.findings if f.severity == "error"]
+    assert codes == ["unbound-rhs-var"]
+
+
+def test_lint_catchall_lhs():
+    res = verify_rules([Rule("CATCHALL", A, P("neg", P("neg", A)))])
+    assert "catchall-lhs" in [f.code for f in res.findings]
+
+
+def test_lint_unknown_op_and_arity():
+    res = verify_rules([
+        Rule("NOOP", P("frobnicate", A), A),
+        Rule("ARITY", P("add", A, B, C), P("add", A, B)),
+    ])
+    codes = {f.subject: f.code for f in res.findings
+             if f.severity == "error"}
+    assert codes == {"NOOP": "unknown-op", "ARITY": "bad-arity"}
+
+
+def test_lint_structural_op_warns():
+    res = verify_rules([Rule("LOADRW", P("load", A), P("load", A))])
+    assert "structural-op" in [f.code for f in res.findings
+                               if f.severity == "warning"]
+
+
+# -- growth classification ----------------------------------------------------
+def test_growth_classification():
+    res = verify_rules(PAPER_RULES + EXTENDED_RULES)
+    growth = {r.name: r.growth for r in res.records}
+    assert growth["FMA1"] == "contracting"     # add+mul -> fma
+    assert growth["COMM-ADD"] == "neutral"
+    assert growth["SUB-AS-ADDNEG"] == "expanding"
+    assert growth["NEG-NEG"] == "contracting"  # neg(neg(a)) -> a
+    assert growth["SQUARE"] == "neutral"       # mul(a,a) -> square(a)
+
+
+# -- differential sensitivity -------------------------------------------------
+def test_ungated_reassociation_is_an_error():
+    """The same ASSOC rewrite without the finite_math flag must be
+    reported as an unsound-rule error by the adversarial tier."""
+    bare = Rule("ASSOC-NOGATE", P("add", A, P("add", B, C)),
+                P("add", P("add", A, B), C))      # finite_math=False
+    res = verify_rules([bare])
+    errs = [f for f in res.findings if f.severity == "error"]
+    assert len(errs) == 1 and errs[0].code == "unsound-rule"
