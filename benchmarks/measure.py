@@ -8,7 +8,7 @@ coefficients, HBM efficiency, per-bound overlap slack, launch overhead),
 persisting them as versioned device profiles under
 ``experiments/device_profiles/``.
 
-Two measurement paths, each flagged with an explicit ``measured_kind``
+Three measurement lanes, each flagged with an explicit ``measured_kind``
 (profiles are fitted per kind — the units are not comparable):
 
 * **model tile programs** (``repro.kernels.tile_programs``) run through
@@ -17,10 +17,20 @@ Two measurement paths, each flagged with an explicit ``measured_kind``
   (``pallas_interpret``: the kernel body executes op-by-op in Python, so
   absolute times are dispatch-dominated; the fitted coefficients and the
   rank ordering are what carry signal).
+* **compiled lane** (PR 8, first-class): the same tile kernels timed
+  under one ``jax.jit`` per schedule (``pallas_compiled``). Each row
+  records ``compile_path`` — ``"native"`` when the Pallas primitives
+  lower to the accelerator, ``"xla_interpret"`` on CPU where the
+  interpret-mode kernel is traced and compiled by XLA (dispatch
+  overhead gone, op costs remain; the honest label keeps the two from
+  being conflated). ``--backend pallas_pipelined`` swaps in the
+  pipelined emitter (interpret fallback on CPU — bit-identical source,
+  so CPU rows measure the same code with a compiled-lane label).
 * **NPB/SPEC suite kernels** (``benchmarks.kernel_suite`` — indexed
   loads/loops, not Pallas-tilable) run their saturated JAX thread body
   sequentially over the grid under one jit (``jax_<backend>_grid``);
-  measured per-instance time is wall / n_threads.
+  measured per-instance time is wall / n_threads. Their features carry
+  the PR-8 trip-count profile (``cg_like``'s ``nnz`` loop).
 
 Warmup iterations are discarded, the median of ``--reps`` repeats is
 kept, and inputs are seeded deterministically; the process re-execs with
@@ -55,7 +65,8 @@ try:
 except ImportError as e:
     die_with_import_help(e)
 
-MEASUREMENTS_SCHEMA_VERSION = 2   # 1 = PR-4, no schedule column
+MEASUREMENTS_SCHEMA_VERSION = 3   # 1 = PR-4; 2 = +schedule (PR 5);
+                                  # 3 = +emitter/compile_path (PR 8)
 PROFILE_DIR = ROOT / "experiments" / "device_profiles"
 DEFAULT_OUT = OUT_ROOT / "measurements.json"
 
@@ -73,6 +84,8 @@ SCHEDULES = ("source", "bulk", "cost")
 # profile when present, so the measured order is the calibrated
 # objective's pick, not the analytic guess
 SCHED_PROFILE = "cpu_pallas_interpret"
+# Pallas emission backends the tile lanes can measure (repro.core.emit)
+BACKENDS = ("pallas", "pallas_pipelined")
 
 
 def _backend() -> str:
@@ -108,11 +121,14 @@ def _sched_profile_name():
             if (PROFILE_DIR / f"{SCHED_PROFILE}.json").exists() else None)
 
 
-def _tile_op_for(name: str, schedule: str):
+def _tile_op_for(name: str, schedule: str, emitter: str = None):
     from repro.kernels.tile_programs import get_tile_op
+    # None (not "pallas") keeps pre-PR-8 cache fingerprints byte-identical
     return get_tile_op(name, schedule=schedule,
                        device_profile=(_sched_profile_name()
-                                       if schedule == "cost" else None))
+                                       if schedule == "cost" else None),
+                       emitter=(emitter if emitter not in (None, "pallas")
+                                else None))
 
 
 def _tile_features(op, schedule: str) -> dict:
@@ -129,7 +145,7 @@ def _tile_features(op, schedule: str) -> dict:
 
 
 def measure_tile_schedules(name: str, reps: int, warmup: int = 3,
-                           schedules=SCHEDULES) -> list:
+                           schedules=SCHEDULES, emitter: str = None) -> list:
     """Median per-call wall time of one tile program's Pallas kernel on
     a single (8, 128) tile (grid of one → per-call == per-instance),
     under every statement ``schedule``.
@@ -145,7 +161,7 @@ def measure_tile_schedules(name: str, reps: int, warmup: int = 3,
     cycles, outside the timed region.
     """
     import gc
-    ops = {s: _tile_op_for(name, s) for s in schedules}
+    ops = {s: _tile_op_for(name, s, emitter) for s in schedules}
     arrays, scalars = tile_inputs_for(next(iter(ops.values())).sk.ssa.prog)
     args = [jax.numpy.asarray(a) for a in arrays]
 
@@ -177,7 +193,7 @@ def measure_tile_schedules(name: str, reps: int, warmup: int = 3,
     rows = []
     for s in schedules:
         row = {"kernel": name, "group": "tile", "measured_kind": kind,
-               "schedule": s,
+               "schedule": s, "emitter": ops[s].pk.emitter,
                "measured_ns": statistics.median(times[s]) * 1e9,
                "reps": reps, "warmup": warmup,
                "features": _tile_features(ops[s], s)}
@@ -198,6 +214,68 @@ def measure_tile_kernel(name: str, reps: int, warmup: int = 3,
     smoke path and ad-hoc use)."""
     return measure_tile_schedules(name, reps, warmup,
                                   schedules=(schedule,))[0]
+
+
+def measure_tile_compiled(name: str, reps: int, warmup: int = 3,
+                          schedules=SCHEDULES, emitter: str = None) -> list:
+    """The compiled lane (PR 8): the same tile kernels, each schedule
+    jitted once and timed hot — ``measured_kind: "pallas_compiled"``.
+
+    On CPU the Pallas call still runs in interpret mode, but *traced
+    under jit*: XLA compiles the interpreted op graph, so the Python
+    dispatch overhead that dominates the eager interpret lane is gone
+    while the op costs remain. Rows record which it was in
+    ``compile_path`` (``"xla_interpret"`` vs ``"native"``) so a fitted
+    ``*_pallas_compiled_sched`` profile is never mistaken for real
+    accelerator numbers. Interleaving/rotation/gc discipline matches
+    :func:`measure_tile_schedules`."""
+    import gc
+    ops = {s: _tile_op_for(name, s, emitter) for s in schedules}
+    arrays, scalars = tile_inputs_for(next(iter(ops.values())).sk.ssa.prog)
+    args = [jax.numpy.asarray(a) for a in arrays]
+    native = _backend() != "cpu"
+    fns = {}
+    for s, op in ops.items():
+        fns[s] = jax.jit(lambda *a, _op=op: _op.apply(*a, **scalars))
+
+    def call(fn):
+        return jax.block_until_ready(fn(*args))
+
+    for _ in range(warmup + 1):      # +1: jit compile outside the clock
+        for fn in fns.values():
+            call(fn)
+    times = {s: [] for s in schedules}
+    order = list(schedules)
+    gc_was_enabled = gc.isenabled()
+    try:
+        for rep in range(reps):
+            gc.collect()
+            gc.disable()
+            rot = rep % len(order)
+            for s in order[rot:] + order[:rot]:
+                t0 = time.perf_counter()
+                call(fns[s])
+                times[s].append(time.perf_counter() - t0)
+            if gc_was_enabled:
+                gc.enable()
+    finally:
+        if gc_was_enabled:
+            gc.enable()
+    rows = []
+    for s in schedules:
+        row = {"kernel": name, "group": "tile",
+               "measured_kind": "pallas_compiled",
+               "compile_path": "native" if native else "xla_interpret",
+               "schedule": s, "emitter": ops[s].pk.emitter,
+               "measured_ns": statistics.median(times[s]) * 1e9,
+               "reps": reps, "warmup": warmup,
+               "features": _tile_features(ops[s], s)}
+        if s != "bulk" and "bulk" in times:
+            row["paired_vs_bulk_pct"] = statistics.median(
+                100.0 * (c - b) / b
+                for c, b in zip(times[s], times["bulk"]))
+        rows.append(row)
+    return rows
 
 
 # ---------------------------------------------------------------------------
@@ -224,26 +302,38 @@ def measure_suite_kernel(name: str, reps: int, n: int = 64 * 64,
             "measured_kind": f"jax_{_backend()}_grid",
             "measured_ns": statistics.median(times) / n_threads * 1e9,
             "reps": reps, "warmup": warmup, "n_threads": n_threads,
-            "features": kernel_features(sk).to_dict()}
+            # scalars resolve runtime-bound trip counts (cg_like's nnz)
+            "features": kernel_features(sk, scalars=scalars).to_dict()}
 
 
 # ---------------------------------------------------------------------------
 # Harness
 # ---------------------------------------------------------------------------
 def measure_all(kernels=None, reps: int = 5, n: int = 64 * 64,
-                schedules=SCHEDULES) -> dict:
+                schedules=SCHEDULES, backend: str = "pallas",
+                compiled: bool = True) -> dict:
     """Measure every requested kernel; returns the measurements document
     (also the ``measure`` section of ``benchmarks/run.py``). Tile
     kernels are timed once per statement schedule — same extracted
-    term, different emission order."""
+    term, different emission order — and, with ``compiled`` on a CPU
+    host, once more per schedule under jit (the compiled lane; on
+    accelerators the eager lane already *is* ``pallas_compiled``, so no
+    second lane runs). ``backend`` picks the Pallas emitter."""
     from benchmarks.kernel_suite import SUITE
     from repro.analysis import DEFAULT_PARAMS, predict_ns, KernelFeatures
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, "
+                         f"got {backend!r}")
     rows = []
     for name in TILE_KERNELS:
         if kernels and name not in kernels:
             continue
-        rows.extend(measure_tile_schedules(name, reps,
-                                           schedules=schedules))
+        rows.extend(measure_tile_schedules(name, reps, schedules=schedules,
+                                           emitter=backend))
+        if compiled and _backend() == "cpu":
+            rows.extend(measure_tile_compiled(name, reps,
+                                              schedules=schedules,
+                                              emitter=backend))
     for name in SUITE:
         if kernels and name not in kernels:
             continue
@@ -252,7 +342,7 @@ def measure_all(kernels=None, reps: int = 5, n: int = 64 * 64,
         feat = KernelFeatures.from_dict(r["features"])
         r["predicted_ns"] = predict_ns(feat, DEFAULT_PARAMS)
     return {"schema_version": MEASUREMENTS_SCHEMA_VERSION,
-            "backend": _backend(), "rows": rows}
+            "backend": _backend(), "emitter": backend, "rows": rows}
 
 
 def fit_profiles(doc: dict, out_dir: pathlib.Path = PROFILE_DIR) -> list:
@@ -284,10 +374,11 @@ def fit_profiles(doc: dict, out_dir: pathlib.Path = PROFILE_DIR) -> list:
                 and sched != "cost":
             continue   # only the cost-schedule rows are fitted
         groups.setdefault(r["measured_kind"], []).append(r)
-    medians = {}
+    medians = {}   # per measured_kind: the lanes must not mix (PR 8)
     for r in doc["rows"]:
         if r.get("group") == "tile" and r.get("schedule") is not None:
-            entry = medians.setdefault(r["kernel"], {})
+            entry = medians.setdefault(r["measured_kind"], {}) \
+                .setdefault(r["kernel"], {})
             entry[r["schedule"]] = r["measured_ns"]
             if r["schedule"] == "cost" and "paired_vs_bulk_pct" in r:
                 entry["cost_vs_bulk_paired_pct"] = r["paired_vs_bulk_pct"]
@@ -308,9 +399,12 @@ def fit_profiles(doc: dict, out_dir: pathlib.Path = PROFILE_DIR) -> list:
             name += "_sched"
         prof = fit_profile(feats, meas, name=name, chip=backend,
                            measured_kind=kind)
-        if sched_group and medians:
-            prof.fit["schedule_medians"] = medians
+        if sched_group and medians.get(kind):
+            prof.fit["schedule_medians"] = medians[kind]
             prof.fit["schedule_mode"] = "cost"
+            cp = rows[0].get("compile_path")
+            if cp is not None:
+                prof.fit["compile_path"] = cp
         f = prof.fit
         ok = (f["spearman"] >= SPEARMAN_FLOOR
               and f["mape_pct"] < f["uncalibrated_mape_pct"])
@@ -374,6 +468,13 @@ def main(argv=None) -> int:
     ap.add_argument("--schedules", default=",".join(SCHEDULES),
                     help="comma-separated statement schedules to time "
                          f"per tile kernel (default {','.join(SCHEDULES)})")
+    ap.add_argument("--backend", choices=BACKENDS, default="pallas",
+                    help="Pallas emission backend for the tile lanes "
+                         "(default pallas; pallas_pipelined emits "
+                         "double-buffered async copies, interpret "
+                         "fallback on CPU)")
+    ap.add_argument("--no-compiled", action="store_true",
+                    help="skip the jitted compiled lane on CPU hosts")
     ap.add_argument("--fit", action="store_true",
                     help="fit device profiles from the measurements and "
                          f"save them under {PROFILE_DIR}")
@@ -386,15 +487,19 @@ def main(argv=None) -> int:
         return smoke()
     kernels = set(args.kernels.split(",")) if args.kernels else None
     doc = measure_all(kernels=kernels, reps=args.reps, n=args.n,
-                      schedules=tuple(args.schedules.split(",")))
+                      schedules=tuple(args.schedules.split(",")),
+                      backend=args.backend,
+                      compiled=not args.no_compiled)
     args.out.parent.mkdir(parents=True, exist_ok=True)
     args.out.write_text(json.dumps(doc, indent=1) + "\n")
     print(f"wrote {args.out} ({len(doc['rows'])} rows, "
-          f"backend={doc['backend']})")
+          f"backend={doc['backend']}, emitter={doc['emitter']})")
     for r in doc["rows"]:
         sched = r.get("schedule", "-")
+        lane = r["measured_kind"] + (
+            f"/{r['compile_path']}" if "compile_path" in r else "")
         print(f"  {r['kernel']:24s} {sched:>6s} {r['measured_ns']:14.1f} ns"
-              f"  [{r['measured_kind']}]")
+              f"  [{lane}]")
     if args.fit:
         written = fit_profiles(doc)
         for p in written:

@@ -1,0 +1,126 @@
+"""PR-8 pipelined-emitter smoke check.
+
+For a small kernel subset, emits each tile program with the
+``pallas_pipelined`` backend and asserts the contract the emitter makes:
+
+* the recorded interpret-mode **fallback source is byte-identical** to
+  what the synchronous ``pallas`` emitter produces under the same
+  (cost) schedule — CPU runs lose nothing but the async staging;
+* running the pipelined op on CPU (interpret fallback) produces
+  **bit-identical outputs** to the synchronous op;
+* the emitted async source + copy plan pass the static verifier
+  (``verify_pallas_kernel``) with **zero error findings** — every
+  ``make_async_copy`` start has exactly one wait, waits dominate first
+  use, buffer/semaphore parity alternates, ≤2 copies in flight.
+
+Deterministic (no timing); used by the ``pipelined-smoke`` CI job and
+as a leg of ``bench_regression.py``.
+
+Usage:
+    python benchmarks/pipelined_smoke.py
+    python benchmarks/pipelined_smoke.py --kernels rmsnorm,swiglu
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+if __package__ in (None, ""):        # direct script invocation
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+from benchmarks.bootstrap import die_with_import_help
+from benchmarks.hashseed import reexec_with_fixed_hashseed
+
+reexec_with_fixed_hashseed()
+
+try:
+    import numpy as np
+    import jax
+except ImportError as e:
+    die_with_import_help(e)
+
+SMOKE_KERNELS = ("rmsnorm", "swiglu", "softmax")
+
+
+def check_kernel(name: str, schedule: str = "cost") -> list:
+    """Failure strings (empty = the kernel passes all three contracts)."""
+    from benchmarks.measure import tile_inputs_for
+    from repro.kernels.tile_programs import get_tile_op
+    from repro.verify import verify_pallas_kernel
+
+    failures = []
+    piped = get_tile_op(name, schedule=schedule, emitter="pallas_pipelined")
+    sync = get_tile_op(name, schedule=schedule)
+
+    if piped.pk.emitter != "pallas_pipelined":
+        failures.append(f"{name}: op built by {piped.pk.emitter!r}, "
+                        "not the pipelined emitter")
+    if not piped.pk.async_plan:
+        failures.append(f"{name}: pipelined emitter recorded no async "
+                        "copies (nothing was actually pipelined)")
+    if piped.pk.fallback_source != sync.pk.source:
+        failures.append(
+            f"{name}: interpret fallback source is not byte-identical to "
+            f"the synchronous emitter under the {schedule} schedule")
+
+    rep = verify_pallas_kernel(piped.pk, piped.sk.ssa)
+    errs = rep.errors()
+    if errs:
+        failures.extend(f"{name}: verify: [{f.code}] {f.message}"
+                        for f in errs)
+
+    arrays, scalars = tile_inputs_for(piped.sk.ssa.prog)
+    args = [jax.numpy.asarray(a) for a in arrays]
+    out_p = piped.apply(*args, **scalars)
+    out_s = sync.apply(*args, **scalars)
+    outs_p = out_p if isinstance(out_p, tuple) else (out_p,)
+    outs_s = out_s if isinstance(out_s, tuple) else (out_s,)
+    for i, (a, b) in enumerate(zip(outs_p, outs_s)):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            failures.append(f"{name}: output {i} of the interpret "
+                            "fallback differs from the synchronous op")
+    return failures
+
+
+def run_pipelined_smoke(kernels=SMOKE_KERNELS, schedule: str = "cost",
+                        quiet: bool = False) -> list:
+    failures = []
+    for name in kernels:
+        fails = check_kernel(name, schedule=schedule)
+        failures.extend(fails)
+        if not quiet:
+            from repro.kernels.tile_programs import get_tile_op
+            op = get_tile_op(name, schedule=schedule,
+                             emitter="pallas_pipelined")
+            plan = ", ".join(
+                f"{c.array}(sem{c.sem} s{c.start_slot}->w{c.wait_slot})"
+                for c in op.pk.async_plan)
+            status = "FAIL" if fails else "ok"
+            print(f"  {name:16s} [{status}] async: {plan or 'none'}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--kernels", default=",".join(SMOKE_KERNELS),
+                    help="comma-separated tile kernels "
+                         f"(default {','.join(SMOKE_KERNELS)})")
+    ap.add_argument("--schedule", default="cost",
+                    choices=("source", "bulk", "cost"))
+    args = ap.parse_args(argv)
+    kernels = tuple(args.kernels.split(","))
+    print(f"pipelined smoke over {len(kernels)} kernels "
+          f"({args.schedule} schedule):")
+    failures = run_pipelined_smoke(kernels, schedule=args.schedule)
+    if failures:
+        print(f"FAIL: {len(failures)} problem(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("pipelined smoke OK: fallback byte-identical, outputs "
+          "bit-identical, async plans verified clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

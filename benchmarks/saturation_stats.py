@@ -19,8 +19,8 @@ from __future__ import annotations
 import statistics
 from typing import Callable, Dict, List, Optional
 
-from repro.core import (SaturatorConfig, compute_schedule, extract_dag,
-                        optimality_gap, saturate_program)
+from repro.core import (SaturatorConfig, SearchConfig, compute_schedule,
+                        extract_dag, optimality_gap, saturate_program)
 from repro.core.pipeline import predict_choice
 from repro.kernels.tile_programs import PROGRAMS
 from repro.verify import (VerifyReport, verify_rules, verify_saturated,
@@ -30,8 +30,9 @@ from .kernel_suite import SUITE
 # Deterministic-run limits for the regression gate: generous wall-clock
 # ceilings so the node/iteration/expansion budgets (machine-independent)
 # are what actually stop saturation and extraction.
-GATE_CONFIG = dict(mode="accsat", time_limit_s=120.0,
-                   extract_time_limit_s=120.0)
+GATE_CONFIG = dict(mode="accsat",
+                   search_cfg=SearchConfig(time_limit_s=120.0,
+                                           extract_time_limit_s=120.0))
 
 
 def all_programs() -> Dict[str, Callable]:

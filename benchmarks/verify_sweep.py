@@ -25,8 +25,9 @@ import json
 import sys
 from typing import Dict, List
 
-from repro.core import SaturatorConfig, compute_schedule, saturate_program
-from repro.core.pallasgen import PallasGenerator
+from repro.core import (SaturatorConfig, SearchConfig, compute_schedule,
+                        saturate_program)
+from repro.core.pallasgen import SyncPallasGenerator
 from repro.core.pipeline import _schedule_cm
 from repro.core.schedule import SCHEDULE_MODES
 from repro.kernels.tile_programs import PROGRAMS
@@ -39,7 +40,9 @@ RULE_SETS = ("paper", "extended")
 def _config(rule_set: str) -> SaturatorConfig:
     return SaturatorConfig(mode="accsat",
                            extended_rules=(rule_set == "extended"),
-                           time_limit_s=120.0, extract_time_limit_s=120.0)
+                           search_cfg=SearchConfig(
+                               time_limit_s=120.0,
+                               extract_time_limit_s=120.0))
 
 
 def sweep(kernels: List[str]) -> Dict:
@@ -72,8 +75,8 @@ def sweep(kernels: List[str]) -> Dict:
                                        subject=f"{kname}:jax"))
             report.sources_checked += 1
             try:
-                pk = PallasGenerator(sk.ssa, sk.extraction,
-                                     bulk=True).generate_pallas()
+                pk = SyncPallasGenerator(sk.ssa, sk.extraction,
+                                         bulk=True).generate_pallas()
             except NotImplementedError:
                 pk = None          # not tilable: JAX source only
             if pk is not None:

@@ -108,6 +108,10 @@ class KernelFeatures:
     sched_loads: Optional[Tuple[Tuple[float, float, float], ...]] = None
     peak_live_bytes: float = 0.0
     sched_mode: Optional[str] = None    # provenance: bulk|source|cost
+    # PR-8 trip-count features: per-loop (trip_count, body_units) from
+    # repro.core.schedule.loop_profile. None/() (every earlier
+    # measurement) keeps the once-through formula bit-identical.
+    loop_trips: Optional[Tuple[Tuple[float, float], ...]] = None
 
     @property
     def vpu_passes(self) -> float:
@@ -118,11 +122,14 @@ class KernelFeatures:
         d["class_passes"] = dict(self.class_passes)
         if self.sched_loads is not None:
             d["sched_loads"] = [list(t) for t in self.sched_loads]
+        if self.loop_trips is not None:
+            d["loop_trips"] = [list(t) for t in self.loop_trips]
         return d
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "KernelFeatures":
         sl = d.get("sched_loads")
+        lt = d.get("loop_trips")
         return cls(kernel=d["kernel"],
                    class_passes={k: float(v)
                                  for k, v in d["class_passes"].items()},
@@ -133,10 +140,15 @@ class KernelFeatures:
                                 tuple(tuple(float(x) for x in t)
                                       for t in sl)),
                    peak_live_bytes=float(d.get("peak_live_bytes", 0.0)),
-                   sched_mode=d.get("sched_mode"))
+                   sched_mode=d.get("sched_mode"),
+                   loop_trips=(None if lt is None else
+                               tuple(tuple(float(x) for x in t)
+                                     for t in lt)))
 
 
-def kernel_features(sk, schedule=None) -> KernelFeatures:
+def kernel_features(sk, schedule=None,
+                    scalars: Optional[Mapping[str, float]] = None
+                    ) -> KernelFeatures:
     """Calibration features of a pipeline result (``SaturatedKernel``).
 
     Prices the *extracted* choice — the exact nodes the beam committed
@@ -145,7 +157,10 @@ def kernel_features(sk, schedule=None) -> KernelFeatures:
     code that actually ran. ``schedule`` (a
     :class:`repro.core.schedule.ScheduleResult`) additionally records
     the emitted order's per-load overlap windows and peak VMEM live
-    set, enabling the position-dependent fit.
+    set, enabling the position-dependent fit. ``scalars`` (runtime
+    scalar bindings, e.g. ``cg_like``'s ``nnz``) lets
+    :func:`repro.core.schedule.loop_profile` resolve scalar-bounded
+    trip counts for the trip-count-aware term.
     """
     from repro.core.extract import choice_nodes  # deferred: core imports us
     from .cost_model import RooflineCostModel
@@ -185,13 +200,16 @@ def kernel_features(sk, schedule=None) -> KernelFeatures:
         sched_loads = tuple(schedule.load_windows())
         peak_live = schedule.peak_live_bytes
         mode = schedule.mode
+    from repro.core.schedule import loop_profile
+    trips = loop_profile(ssa, scalars=dict(scalars) if scalars else None)
     return KernelFeatures(kernel=ssa.prog.name, class_passes=classes,
                           mxu_flops=stats.mxu_flops,
                           hbm_bytes=stats.total_bytes,
                           flops=stats.total_flops,
                           sched_loads=sched_loads,
                           peak_live_bytes=peak_live or 0.0,
-                          sched_mode=mode)
+                          sched_mode=mode,
+                          loop_trips=trips or None)
 
 
 # ---------------------------------------------------------------------------
@@ -211,6 +229,12 @@ class CalibrationParams:
     overlap_efficiency: Optional[float] = None
     # Spill-traffic multiplier on VMEM working set beyond the budget.
     vmem_pressure_coeff: float = 0.0
+    # -- trip-count term (PR 8; 0.0 == the once-through formula) -----------
+    # Per-(extra-iteration × body-unit) cost in VPU-pass-equivalents:
+    # loop bodies are priced once by class_passes, so a loop running T
+    # times adds (T-1) × body_units × coeff extra passes. Identifiable
+    # only from measurements whose features carry loop_trips (cg_like).
+    trip_count_coeff: float = 0.0
 
     def coeff(self, kls: str) -> float:
         d = self.vpu_pass_coeffs.get(kls)
@@ -234,7 +258,8 @@ class CalibrationParams:
                                     d.get("vpu_pass_coeffs", {}).items()},
                    overlap_efficiency=None if eff is None else float(eff),
                    vmem_pressure_coeff=float(
-                       d.get("vmem_pressure_coeff", 0.0)))
+                       d.get("vmem_pressure_coeff", 0.0)),
+                   trip_count_coeff=float(d.get("trip_count_coeff", 0.0)))
 
 
 DEFAULT_PARAMS = CalibrationParams()
@@ -278,6 +303,10 @@ def predict_ns(feat: KernelFeatures, params: CalibrationParams,
     compute = sum(p * params.coeff(k)
                   for k, p in feat.class_passes.items()) * per_pass_ns
     compute += feat.mxu_flops / chip.peak_flops_bf16 * 1e9
+    if params.trip_count_coeff and feat.loop_trips:
+        extra = sum(max(t - 1.0, 0.0) * units
+                    for t, units in feat.loop_trips)
+        compute += params.trip_count_coeff * extra * per_pass_ns
     bw = chip.hbm_bw * params.hbm_efficiency
     memory = feat.hbm_bytes / bw * 1e9
     if params.overlap_efficiency is not None:
@@ -407,6 +436,10 @@ def fit_params(feats: Sequence[KernelFeatures],
     has_sched = any(f.sched_loads for f in feats)
     over_budget = any(f.peak_live_bytes > chip.vmem_bytes / 4
                       for f in feats)
+    # trip counts are only identifiable when some measured kernel has a
+    # loop that actually iterates (trips > 1); otherwise flat at 0
+    has_trips = any(t > 1.0 for f in feats
+                    for t, _ in (f.loop_trips or ()))
 
     # scale-matched starts: uncalibrated predictions are ns-scale while
     # interpret-mode measurements are µs/ms-scale; starting coefficients
@@ -487,6 +520,16 @@ def fit_params(feats: Sequence[KernelFeatures],
                     dataclasses.replace(params, vmem_pressure_coeff=max(
                         params.vmem_pressure_coeff + d, 0.0))
                     for d in slack_steps))
+            if has_trips:
+                # multiplicative when already non-zero, seeded from the
+                # fitted "simple" pass coefficient otherwise (the body's
+                # per-iteration cost should start on the compute scale)
+                try_param(lambda: (
+                    dataclasses.replace(params, trip_count_coeff=tc)
+                    for tc in ([params.trip_count_coeff * s
+                                for s in mul_steps]
+                               if params.trip_count_coeff > 0 else
+                               [0.0, 0.1 * scale, scale, 10.0 * scale])))
             if not improved:
                 break
         return params, best, rounds

@@ -123,8 +123,13 @@ def device_profile_id(config) -> Optional[str]:
 def config_fingerprint(config) -> str:
     """Digest of everything besides the program/rules that shapes the
     committed result: mode, search strategy + deterministic budgets,
-    schedule mode, cost model, device profile. Wall-clock time limits
-    are excluded (safety nets, machine-dependent)."""
+    schedule mode, cost model, device profile — and, for non-default
+    emission backends, the versioned emitter id (``name@v{n}``, see
+    ``repro.core.emit.emitter_cache_id``) so cached replays never mix
+    emitters. Default emitters (None/"jax"/"pallas") contribute no key
+    at all: fingerprints of pre-PR-8 configs stay byte-identical and no
+    existing cache entry invalidates. Wall-clock time limits are
+    excluded (safety nets, machine-dependent)."""
     doc = {
         "mode": config.mode,
         "cost_model": config.cost_model,
@@ -139,6 +144,10 @@ def config_fingerprint(config) -> str:
         "schedule": config.schedule_mode,
         "device_profile": device_profile_id(config),
     }
+    from repro.core.emit import emitter_cache_id
+    em = emitter_cache_id(getattr(config, "emitter", None))
+    if em is not None:
+        doc["emitter"] = em
     return _digest(doc)
 
 

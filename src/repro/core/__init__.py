@@ -11,11 +11,15 @@ from .beam import BeamStats, beam_search
 from .egraph import EGraph, P, Pattern, PatVar, V, add_expr
 from .extract import (ExtractionResult, extract_dag, extract_exact,
                       optimality_gap)
+from .emit import EMITTER_NAMES, Emitter, EmitterInfo, get_emitter
 from .ir import ENode
 from .jaxpr_bridge import BridgeUnsupported, maybe_saturate, saturate_jax_fn
-from .pallasgen import PallasGenerator, TileOp, make_tile_op, pick_row_block
-from .pipeline import (CACHE_ENV_VAR, MODES, SaturatedKernel,
-                       SaturatorConfig, saturate_all_modes,
+from .pallasgen import (PallasGenerator,  # deprecated-ok (re-export)
+                        PipelinedPallasGenerator, SyncPallasGenerator,
+                        TileOp, make_tile_op, pick_row_block)
+from .pipeline import (CACHE_ENV_VAR, MODES, VERIFY_ENV_VAR, CacheConfig,
+                       SaturatedKernel, SaturatorConfig, ScheduleConfig,
+                       SearchConfig, VerifyConfig, saturate_all_modes,
                        saturate_program)
 from .reference import run_reference
 from .rules import (EXTENDED_RULES, PAPER_RULES, TPU_RULES, Rule, run_rules)
@@ -32,7 +36,10 @@ __all__ = [
     "ENode", "ExtractionResult", "extract_dag", "extract_exact",
     "BeamStats", "beam_search", "optimality_gap",
     "BridgeUnsupported", "maybe_saturate", "saturate_jax_fn",
-    "PallasGenerator", "TileOp", "make_tile_op", "pick_row_block", "MODES",
+    "EMITTER_NAMES", "Emitter", "EmitterInfo", "get_emitter",
+    "PallasGenerator", "SyncPallasGenerator", "PipelinedPallasGenerator",
+    "TileOp", "make_tile_op", "pick_row_block", "MODES", "VERIFY_ENV_VAR",
+    "SearchConfig", "ScheduleConfig", "CacheConfig", "VerifyConfig",
     "SaturatedKernel", "SaturatorConfig", "saturate_all_modes",
     "saturate_program", "run_reference", "PAPER_RULES", "EXTENDED_RULES",
     "TPU_RULES", "Rule", "run_rules", "build_ssa", "SSAResult",

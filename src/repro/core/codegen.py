@@ -29,6 +29,7 @@ from __future__ import annotations
 import dataclasses
 import sys
 import textwrap
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple, Union
 
 from .egraph import EGraph
@@ -168,7 +169,12 @@ class _Scope:
         self.syms[-1][sym] = name
 
 
-class CodeGenerator:
+class JaxCodeGenerator:
+    """The ``"jax"`` emitter: saturated Python/JAX source, exec'd into a
+    callable. Known as ``CodeGenerator`` before the PR-8 emitter
+    registry (:mod:`repro.core.emit`); that name remains as a deprecated
+    alias."""
+
     def __init__(self, ssa: SSAResult, extraction: ExtractionResult, *,
                  bulk: bool = True, fn_name: Optional[str] = None,
                  extra_fns: Optional[Dict[str, Callable]] = None,
@@ -549,11 +555,26 @@ class CodeGenerator:
             schedule_mode=self.schedule_mode, schedule=sched)
 
 
+class CodeGenerator(JaxCodeGenerator):
+    """Deprecated alias of :class:`JaxCodeGenerator`.
+
+    Use ``repro.core.emit.get_emitter("jax")`` (or ``JaxCodeGenerator``
+    directly) instead; this name is kept so pre-PR-8 imports keep
+    working."""
+
+    def __init__(self, *args, **kwargs):
+        warnings.warn(
+            "repro.core.codegen.CodeGenerator is deprecated; use "
+            "repro.core.emit.get_emitter('jax') or JaxCodeGenerator",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(*args, **kwargs)
+
+
 def generate_jax(ssa: SSAResult, extraction: ExtractionResult, *,
                  bulk: bool = True, fn_name: Optional[str] = None,
                  extra_fns: Optional[Dict[str, Callable]] = None,
                  schedule: Optional[Union[str, ScheduleResult]] = None,
                  sched_cost_model=None) -> GeneratedKernel:
-    return CodeGenerator(ssa, extraction, bulk=bulk, fn_name=fn_name,
-                         extra_fns=extra_fns, schedule=schedule,
-                         sched_cost_model=sched_cost_model).generate()
+    return JaxCodeGenerator(ssa, extraction, bulk=bulk, fn_name=fn_name,
+                            extra_fns=extra_fns, schedule=schedule,
+                            sched_cost_model=sched_cost_model).generate()

@@ -20,14 +20,16 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
+import warnings
 from typing import Any, Callable, Dict, Optional
 
 from repro.analysis import RooflineCostModel
 
-from .codegen import CodeGenerator, GeneratedKernel
+from .codegen import JaxCodeGenerator, GeneratedKernel
 from .cost import CostModel, TPUCostModel
 from .dsl import KernelProgram
 from .egraph import EGraph
+from .emit import EMITTER_NAMES
 from .extract import SEARCH_STRATEGIES, ExtractionResult, extract_dag
 from .rules import (EXTENDED_RULES, PAPER_RULES, TPU_RULES, Rule,
                     SaturationReport, run_rules)
@@ -40,65 +42,178 @@ from .telemetry import telemetry
 # cache_dir (the launch drivers use this to make serving/training warm
 # across processes).
 CACHE_ENV_VAR = "REPRO_SAT_CACHE"
+# Environment switch for static verification: a repro.verify level name
+# ("off" | "cheap" | "full") picked up by SaturatorConfig.from_env().
+VERIFY_ENV_VAR = "REPRO_VERIFY"
 
 MODES = ("baseline", "cse", "cse_sat", "cse_bulk", "accsat")
 COST_MODELS = ("paper", "tpu_v5e", "roofline")
 SEARCHES = SEARCH_STRATEGIES  # single source of truth: repro.core.extract
 
+_UNSET = object()   # "caller did not pass this" sentinel (from_env)
 
-@dataclasses.dataclass
-class SaturatorConfig:
-    mode: str = "accsat"
-    # paper §VII limits: 10k e-nodes, 10 iters, 10 s saturation, 30 s extract
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    """Saturation + extraction search budgets (paper §VII limits).
+
+    ``iter_limit``/``node_limit``/``time_limit_s`` bound equality
+    saturation (10 iters, 10k e-nodes, 10 s); ``extract_time_limit_s``
+    bounds extraction (30 s). ``search`` picks the global extraction
+    strategy — beam search (default, hill climb kept as the polish pass)
+    or ``"hillclimb"`` (the PR-2 extractor, for ablations);
+    ``beam_expansions``/``hillclimb_evals`` are the deterministic search
+    budgets (scored swaps) — wall clocks are only safety nets.
+    ``beam_coordinated`` enables multi-class beam moves (load +
+    consumers swapped together), escaping plateaus the 1-swap
+    neighborhood cannot leave. ``local_search`` is the DAG-cost
+    refinement pass (ILP stand-in)."""
     iter_limit: int = 10
     node_limit: int = 10_000
     time_limit_s: float = 10.0
     extract_time_limit_s: float = 30.0
-    # 'roofline' minimizes predicted latency (repro.analysis); 'paper' and
-    # 'tpu_v5e' are the flat-weight models kept for ablation comparisons.
-    cost_model: str = "roofline"
-    extended_rules: bool = False   # §V-A restricted set (off, as in paper)
-    tpu_rules: bool = False        # beyond-paper strength reduction
-    local_search: bool = True      # DAG-cost refinement (ILP stand-in)
-    # global extraction strategy: beam search (default, hill climb kept as
-    # the polish pass) or 'hillclimb' (the PR-2 extractor, for ablations);
-    # beam_expansions / hillclimb_evals are the deterministic search
-    # budgets (scored swaps) — wall clocks are only safety nets
+    local_search: bool = True
     search: str = "beam"
     beam_width: int = 8
     beam_expansions: int = 10_000
     hillclimb_evals: int = 100_000
-    # Calibrated objective: a DeviceProfile instance, a path, or a bare
-    # profile name under experiments/device_profiles/ (see
-    # repro.analysis.calibrate). None keeps the analytic roofline
-    # constants — the default, so committed baselines stay in analytic
-    # units. Only meaningful with cost_model="roofline".
-    device_profile: Optional[Any] = None
-    # Statement order of the generated kernel (repro.core.schedule):
-    # "source" = loads at use sites, "bulk" = the paper's bulk load
-    # (bit-identical to the pre-PR-5 emitter), "cost" = cost-driven
-    # legal topological order minimizing the schedule-aware latency
-    # objective. None keeps the mode's historical default (bulk for
-    # accsat/cse_bulk, source otherwise), so baselines never drift.
-    schedule: Optional[str] = None
-    # Coordinated multi-class beam moves (load + consumers swapped
-    # together) — escapes plateaus the 1-swap neighborhood cannot leave.
     beam_coordinated: bool = True
-    # Persistent saturation cache (repro.cache): a directory path (or a
-    # SaturationCache instance) enabling on-disk reuse of committed
-    # extraction choices + schedule orders across processes. None falls
-    # back to the REPRO_SAT_CACHE environment variable (unset = off).
-    # An exact hit skips saturation, beam search, and schedule search
-    # and re-emits a bit-identical kernel; a near-miss (same kernel,
-    # other shapes) seeds the searches when cache_warm_start is on.
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    """Statement order + emission backend of the generated kernel.
+
+    ``schedule`` (repro.core.schedule): "source" = loads at use sites,
+    "bulk" = the paper's bulk load (bit-identical to the pre-PR-5
+    emitter), "cost" = cost-driven legal topological order minimizing
+    the schedule-aware latency objective. None keeps the mode's
+    historical default (bulk for accsat/cse_bulk, source otherwise), so
+    baselines never drift.
+
+    ``device_profile``: a calibrated DeviceProfile instance, a path, or
+    a bare profile name under experiments/device_profiles/ (see
+    repro.analysis.calibrate). None keeps the analytic roofline
+    constants. Only meaningful with cost_model="roofline" for
+    extraction; always prices the cost schedule search.
+
+    ``emitter`` (repro.core.emit): registry name of the emission
+    backend. None keeps the context's default ("jax" in the pipeline,
+    "pallas" in make_tile_op); "pallas_pipelined" emits double-buffered
+    async copies. Non-default emitters enter the cache fingerprint as
+    ``name@v{version}`` so cached replays never mix emitters."""
+    schedule: Optional[str] = None
+    device_profile: Optional[Any] = None
+    emitter: Optional[str] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Persistent saturation cache (repro.cache).
+
+    ``cache_dir``: a directory path (or SaturationCache instance)
+    enabling on-disk reuse of committed extraction choices + schedule
+    orders across processes. None falls back to the REPRO_SAT_CACHE
+    environment variable (unset = off); False disables the cache even
+    when that variable is set (the resolved form of ``--no-cache``).
+    An exact hit skips saturation, beam search, and schedule search
+    and re-emits a bit-identical kernel; a near-miss (same kernel,
+    other shapes) seeds the searches when ``cache_warm_start`` is on."""
     cache_dir: Optional[Any] = None
     cache_warm_start: bool = True
-    # Static verification (repro.verify): "off" adds zero overhead,
-    # "cheap" audits the e-graph + certifies the attached schedule +
-    # lints the emitted source on every build (cold and cached replay),
-    # "full" additionally certifies reconstructed legacy orders and
-    # differentially re-validates the active rule set.
+
+
+@dataclasses.dataclass(frozen=True)
+class VerifyConfig:
+    """Static verification (repro.verify): "off" adds zero overhead,
+    "cheap" audits the e-graph + certifies the attached schedule +
+    lints the emitted source on every build (cold and cached replay),
+    "full" additionally certifies reconstructed legacy orders and
+    differentially re-validates the active rule set."""
     verify: str = "off"
+
+
+_GROUP_FIELDS = {
+    "search_cfg": SearchConfig,
+    "schedule_cfg": ScheduleConfig,
+    "cache_cfg": CacheConfig,
+    "verify_cfg": VerifyConfig,
+}
+# legacy flat kwarg -> owning sub-config field ("emitter" is post-split,
+# so it is a first-class keyword, not a deprecated one)
+_LEGACY_TO_GROUP = {
+    f.name: g for g, cls in _GROUP_FIELDS.items()
+    for f in dataclasses.fields(cls) if f.name != "emitter"
+}
+
+
+@dataclasses.dataclass(init=False)
+class SaturatorConfig:
+    """Pipeline configuration, grouped since PR 8.
+
+    Four evergreen fields stay flat (``mode``, ``cost_model``,
+    ``extended_rules``, ``tpu_rules``); everything else lives in the
+    :class:`SearchConfig` / :class:`ScheduleConfig` / :class:`CacheConfig`
+    / :class:`VerifyConfig` sub-configs (``search_cfg`` etc.). The old
+    flat keyword arguments still construct (forwarded into their group
+    with a ``DeprecationWarning``) and every flat *read* keeps working
+    through read-only properties, so pre-PR-8 call sites and cache
+    fingerprints are unchanged.
+
+    ``cost_model``: 'roofline' minimizes predicted latency
+    (repro.analysis); 'paper' and 'tpu_v5e' are the flat-weight models
+    kept for ablation comparisons. ``extended_rules`` is the §V-A
+    restricted set (off, as in the paper); ``tpu_rules`` adds the
+    beyond-paper strength-reduction set."""
+    mode: str = "accsat"
+    cost_model: str = "roofline"
+    extended_rules: bool = False
+    tpu_rules: bool = False
+    search_cfg: SearchConfig = dataclasses.field(
+        default_factory=SearchConfig)
+    schedule_cfg: ScheduleConfig = dataclasses.field(
+        default_factory=ScheduleConfig)
+    cache_cfg: CacheConfig = dataclasses.field(default_factory=CacheConfig)
+    verify_cfg: VerifyConfig = dataclasses.field(default_factory=VerifyConfig)
+
+    def __init__(self, mode: str = "accsat", cost_model: str = "roofline",
+                 extended_rules: bool = False, tpu_rules: bool = False,
+                 search_cfg: Optional[SearchConfig] = None,
+                 schedule_cfg: Optional[ScheduleConfig] = None,
+                 cache_cfg: Optional[CacheConfig] = None,
+                 verify_cfg: Optional[VerifyConfig] = None,
+                 emitter: Any = _UNSET, **legacy: Any):
+        self.mode = mode
+        self.cost_model = cost_model
+        self.extended_rules = extended_rules
+        self.tpu_rules = tpu_rules
+        groups: Dict[str, Any] = {
+            "search_cfg": search_cfg or SearchConfig(),
+            "schedule_cfg": schedule_cfg or ScheduleConfig(),
+            "cache_cfg": cache_cfg or CacheConfig(),
+            "verify_cfg": verify_cfg or VerifyConfig(),
+        }
+        unknown = sorted(k for k in legacy if k not in _LEGACY_TO_GROUP)
+        if unknown:
+            raise TypeError(f"SaturatorConfig got unexpected keyword "
+                            f"argument(s) {unknown}")
+        if legacy:
+            owners = sorted({_LEGACY_TO_GROUP[k] for k in legacy})
+            warnings.warn(
+                f"flat SaturatorConfig kwarg(s) {sorted(legacy)} are "
+                f"deprecated; pass the grouped {'/'.join(owners)} "
+                f"sub-config(s) instead", DeprecationWarning, stacklevel=2)
+            for k, v in legacy.items():
+                g = _LEGACY_TO_GROUP[k]
+                groups[g] = dataclasses.replace(groups[g], **{k: v})
+        if emitter is not _UNSET:
+            groups["schedule_cfg"] = dataclasses.replace(
+                groups["schedule_cfg"], emitter=emitter)
+        self.search_cfg = groups["search_cfg"]
+        self.schedule_cfg = groups["schedule_cfg"]
+        self.cache_cfg = groups["cache_cfg"]
+        self.verify_cfg = groups["verify_cfg"]
+        self.__post_init__()
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -114,10 +229,124 @@ class SaturatorConfig:
                 self.schedule not in SCHEDULE_MODES:
             raise ValueError(f"schedule must be one of {SCHEDULE_MODES}, "
                              f"got {self.schedule}")
+        if self.emitter is not None and self.emitter not in EMITTER_NAMES:
+            raise ValueError(f"emitter must be one of {EMITTER_NAMES}, "
+                             f"got {self.emitter}")
         from repro.verify import VERIFY_LEVELS
         if self.verify not in VERIFY_LEVELS:
             raise ValueError(f"verify must be one of {VERIFY_LEVELS}, "
                              f"got {self.verify}")
+
+    # -- resolved side-channels (one documented front door) --------------
+    @classmethod
+    def from_env(cls, *, cache_dir: Any = _UNSET, verify: Any = _UNSET,
+                 flags: Any = None, env: Optional[Dict[str, str]] = None,
+                 **kwargs: Any) -> "SaturatorConfig":
+        """Build a config with the cache/verify side-channels resolved.
+
+        Precedence, per setting: **explicit keyword argument > CLI flag
+        > environment variable > default**. ``flags`` is an
+        ``argparse.Namespace`` (or mapping) that may carry ``cache_dir``,
+        ``no_cache`` and ``verify`` — the launch drivers
+        (``repro.launch.serve`` / ``repro.launch.train``) pass their
+        parsed args here verbatim. Environment variables consulted:
+        ``REPRO_SAT_CACHE`` (cache directory) and ``REPRO_VERIFY``
+        (verification level); ``env`` overrides ``os.environ`` for
+        tests. The resolved values land in ``cache_cfg``/``verify_cfg``
+        (``--no-cache`` resolves to ``cache_dir=False``, which disables
+        the cache even when ``REPRO_SAT_CACHE`` is set); remaining
+        ``kwargs`` pass through to the constructor."""
+        env_map = os.environ if env is None else env
+        if flags is None:
+            fl: Dict[str, Any] = {}
+        elif isinstance(flags, dict):
+            fl = dict(flags)
+        else:
+            fl = vars(flags)
+        if cache_dir is _UNSET:
+            if fl.get("no_cache"):
+                cache_dir = False
+            elif fl.get("cache_dir") is not None:
+                cache_dir = fl["cache_dir"]
+            else:
+                cache_dir = env_map.get(CACHE_ENV_VAR) or None
+        if verify is _UNSET:
+            if fl.get("verify") is not None:
+                verify = fl["verify"]
+            else:
+                verify = env_map.get(VERIFY_ENV_VAR) or "off"
+        cache_cfg = dataclasses.replace(
+            kwargs.pop("cache_cfg", None) or CacheConfig(),
+            cache_dir=cache_dir)
+        verify_cfg = dataclasses.replace(
+            kwargs.pop("verify_cfg", None) or VerifyConfig(),
+            verify=verify)
+        return cls(cache_cfg=cache_cfg, verify_cfg=verify_cfg, **kwargs)
+
+    # -- flat read-only views (pre-PR-8 call sites + cache fingerprints) --
+    @property
+    def iter_limit(self) -> int:
+        return self.search_cfg.iter_limit
+
+    @property
+    def node_limit(self) -> int:
+        return self.search_cfg.node_limit
+
+    @property
+    def time_limit_s(self) -> float:
+        return self.search_cfg.time_limit_s
+
+    @property
+    def extract_time_limit_s(self) -> float:
+        return self.search_cfg.extract_time_limit_s
+
+    @property
+    def local_search(self) -> bool:
+        return self.search_cfg.local_search
+
+    @property
+    def search(self) -> str:
+        return self.search_cfg.search
+
+    @property
+    def beam_width(self) -> int:
+        return self.search_cfg.beam_width
+
+    @property
+    def beam_expansions(self) -> int:
+        return self.search_cfg.beam_expansions
+
+    @property
+    def hillclimb_evals(self) -> int:
+        return self.search_cfg.hillclimb_evals
+
+    @property
+    def beam_coordinated(self) -> bool:
+        return self.search_cfg.beam_coordinated
+
+    @property
+    def schedule(self) -> Optional[str]:
+        return self.schedule_cfg.schedule
+
+    @property
+    def device_profile(self) -> Optional[Any]:
+        return self.schedule_cfg.device_profile
+
+    @property
+    def emitter(self) -> Optional[str]:
+        return self.schedule_cfg.emitter
+
+    @property
+    def cache_dir(self) -> Optional[Any]:
+        return self.cache_cfg.cache_dir
+
+    @property
+    def cache_warm_start(self) -> bool:
+        return self.cache_cfg.cache_warm_start
+
+    @property
+    def verify(self) -> str:
+        return self.verify_cfg.verify
 
     @property
     def schedule_mode(self) -> str:
@@ -269,8 +498,12 @@ def predict_choice(ssa: SSAResult, choice, roots, n_stores: int,
 
 def _resolve_cache(cfg: SaturatorConfig):
     """The configured SaturationCache, or None (off). ``cache_dir=None``
-    consults the REPRO_SAT_CACHE environment variable."""
+    consults the REPRO_SAT_CACHE environment variable; ``False`` is the
+    resolved "explicitly off" form (``SaturatorConfig.from_env`` with
+    ``--no-cache``) and never falls back to the environment."""
     cdir = cfg.cache_dir
+    if cdir is False:
+        return None
     if cdir is None:
         cdir = os.environ.get(CACHE_ENV_VAR) or None
         if cdir is None:
@@ -340,7 +573,7 @@ def _replay_cached(prog, cfg: SaturatorConfig, ssa: SSAResult,
             tree_cost=float(entry.get("tree_cost") or 0.0),
             wall_s=extract_wall, search="cache")
         t1 = time.perf_counter()
-        gen = CodeGenerator(
+        gen = JaxCodeGenerator(
             ssa, extraction, bulk=cfg.use_bulk, extra_fns=extra_fns,
             reuse_temps=cfg.use_cse,
             schedule=sched if sched is not None else cfg.schedule,
@@ -482,12 +715,12 @@ def saturate_program(prog: KernelProgram,
                 seed_orders=seed_order_keys)
         except ValueError:
             sched_arg = cfg.schedule
-    gen = CodeGenerator(ssa, extraction, bulk=cfg.use_bulk,
-                        extra_fns=extra_fns,
-                        reuse_temps=cfg.use_cse,
-                        schedule=sched_arg,
-                        sched_cost_model=cfg.make_schedule_cost_model(prog)
-                        ).generate()
+    gen = JaxCodeGenerator(ssa, extraction, bulk=cfg.use_bulk,
+                           extra_fns=extra_fns,
+                           reuse_temps=cfg.use_cse,
+                           schedule=sched_arg,
+                           sched_cost_model=cfg.make_schedule_cost_model(prog)
+                           ).generate()
     codegen_wall = time.perf_counter() - t1
     # Roofline prediction of the chosen term including root-store write
     # traffic (known only post-codegen), regardless of which cost model

@@ -32,7 +32,7 @@ This module makes statement order a first-class, cost-driven choice:
     structurally;
 
 * :class:`ScheduleResult` carries the per-region orders (consumed by
-  ``CodeGenerator``/``PallasGenerator``), the schedule-feature vector
+  ``JaxCodeGenerator``/the Pallas generators), the schedule-feature vector
   for calibration (per-load overlap windows, peak live bytes), and the
   predicted latency of each named order;
 * :func:`random_topological_order` / :func:`is_legal_order` support the
@@ -812,3 +812,55 @@ def compute_schedule(ssa: SSAResult, choice: Dict[int, ENode], *,
                           predicted_ns=predicted,
                           predicted_by_mode=by_mode,
                           moves_scored=moves)
+
+
+def loop_profile(ssa: SSAResult, scalars: Optional[Dict[str, float]] = None
+                 ) -> Tuple[Tuple[float, float], ...]:
+    """Static per-loop ``(trip_count, body_units)`` calibration features.
+
+    Walks the SSA region tree and, for every loop, resolves the trip
+    count from the e-graph's constant-folding analysis — falling back to
+    ``scalars`` for runtime-scalar bounds (``cg_like``'s ``nnz`` is a
+    scalar the measurement harness *does* know at measure time).
+    ``body_units`` is the loop body's per-iteration statement count
+    (store effects + scalar/array carry updates — a deterministic
+    dispatch-equivalent regressor; the fitted coefficient absorbs the
+    per-statement cost scale); nested loops
+    multiply the enclosing trip counts in. Unresolvable bounds record a
+    trip count of 0.0, which prices as the old once-through formula
+    (the extra term contributes nothing)."""
+    eg = ssa.egraph
+    scalars = scalars or {}
+
+    def resolve(cid: int) -> Optional[float]:
+        ec = eg.classes.get(eg.find(cid))
+        if ec is None:
+            return None
+        if ec.data is not None:
+            return float(ec.data)
+        for n in ec.nodes:
+            if n.op == "var" and n.payload in scalars:
+                return float(scalars[n.payload])
+        return None
+
+    def body_units(loop: LoopRegion) -> float:
+        stores = sum(1 for item in loop.body.items
+                     if not isinstance(item, LoopRegion))
+        return float(stores + len(loop.carries)
+                     + len(loop.array_carries))
+
+    out: List[Tuple[float, float]] = []
+
+    def walk(region, outer_trips: float) -> None:
+        for item in region.items:
+            if not isinstance(item, LoopRegion):
+                continue
+            start = resolve(item.start_cid)
+            stop = resolve(item.stop_cid)
+            trips = (max(stop - start, 0.0)
+                     if start is not None and stop is not None else 0.0)
+            out.append((trips * outer_trips, body_units(item)))
+            walk(item.body, outer_trips * max(trips, 1.0))
+
+    walk(ssa.region, 1.0)
+    return tuple(out)

@@ -25,6 +25,7 @@ from .tile_programs import get_tile_op
 
 _IMPL: Optional[str] = None  # None = auto
 _SAT_CACHE: Optional[str] = None  # persistent saturation cache directory
+_SAT_VERIFY: Optional[str] = None  # static-verification level for builds
 
 
 def set_impl(impl: Optional[str]):
@@ -49,8 +50,22 @@ def current_saturation_cache() -> Optional[str]:
     return _SAT_CACHE
 
 
+def set_saturation_verify(level: Optional[str]):
+    """Static-verification level ("off" | "cheap" | "full", see
+    repro.verify) applied to every tile op built after this call. The
+    launch drivers resolve --verify / REPRO_VERIFY through
+    SaturatorConfig.from_env and thread the result here; None/"off"
+    adds zero overhead (the default)."""
+    global _SAT_VERIFY
+    _SAT_VERIFY = None if level in (None, "off") else str(level)
+
+
+def current_saturation_verify() -> Optional[str]:
+    return _SAT_VERIFY
+
+
 def _op(name: str):
-    return get_tile_op(name, cache_dir=_SAT_CACHE)
+    return get_tile_op(name, cache_dir=_SAT_CACHE, verify=_SAT_VERIFY)
 
 
 def current_impl() -> str:

@@ -13,7 +13,8 @@ from __future__ import annotations
 import functools
 from typing import Callable, Dict
 
-from repro.core import (KernelProgram, SaturatorConfig, c, gelu_tanh, log,
+from repro.core import (CacheConfig, KernelProgram, SaturatorConfig,
+                        ScheduleConfig, VerifyConfig, c, gelu_tanh, log,
                         make_tile_op, exp, recip, rmax, rmean, rothalf,
                         rsqrt, rsum, select, sigmoid, silu, sqrt, square,
                         TileOp, v)
@@ -239,7 +240,9 @@ PROGRAMS: Dict[str, Callable[[], KernelProgram]] = {
 def get_tile_op(name: str, mode: str = "accsat",
                 schedule: str = None,
                 device_profile: str = None,
-                cache_dir: str = None) -> TileOp:
+                cache_dir: str = None,
+                emitter: str = None,
+                verify: str = None) -> TileOp:
     """Build (and cache) the saturated TileOp for a named program.
 
     ``schedule`` picks the statement order of the emitted kernel
@@ -248,15 +251,24 @@ def get_tile_op(name: str, mode: str = "accsat",
     way, so the *selected term* is identical across schedules; only the
     emission order moves. ``device_profile`` prices the cost-driven
     schedule search with a calibrated model (name/path of a profile
-    under ``experiments/device_profiles/``).
+    under ``experiments/device_profiles/``). ``emitter`` selects the
+    Pallas emission backend (``"pallas" | "pallas_pipelined"``, see
+    :mod:`repro.core.emit`; None = synchronous ``"pallas"``).
 
     ``cache_dir`` (see :mod:`repro.cache`) persists the saturation
     result on disk: this ``lru_cache`` only amortizes within a process,
     the directory amortizes across processes and boots. Use
     ``repro.kernels.ops.set_saturation_cache`` to set it globally for
-    the model hot paths."""
-    cfg = SaturatorConfig(mode=mode, cost_model="tpu_v5e",
-                          tpu_rules=(mode in ("cse_sat", "accsat")),
-                          schedule=schedule, device_profile=device_profile,
-                          cache_dir=cache_dir)
+    the model hot paths. ``verify`` ("off" | "cheap" | "full", see
+    :mod:`repro.verify`) statically audits the build; the launch
+    drivers thread their resolved ``--verify``/``REPRO_VERIFY`` level
+    here via ``ops.set_saturation_verify``."""
+    cfg = SaturatorConfig(
+        mode=mode, cost_model="tpu_v5e",
+        tpu_rules=(mode in ("cse_sat", "accsat")),
+        schedule_cfg=ScheduleConfig(schedule=schedule,
+                                    device_profile=device_profile,
+                                    emitter=emitter),
+        cache_cfg=CacheConfig(cache_dir=cache_dir),
+        verify_cfg=VerifyConfig(verify=verify) if verify else None)
     return make_tile_op(PROGRAMS[name](), cfg)

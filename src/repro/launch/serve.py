@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core import SaturatorConfig
 from repro.core.telemetry import telemetry
 from repro.kernels import ops
 from repro.models import get_model
@@ -49,11 +50,14 @@ class Request:
 class Server:
     def __init__(self, arch: str, *, smoke: bool = True, max_batch: int = 4,
                  max_seq: int = 128, seed: int = 0,
-                 cache_dir: Optional[str] = None):
+                 cache_dir: Optional[str] = None,
+                 verify: Optional[str] = None):
         # every saturated tile op the model layers dispatch through
         # repro.kernels.ops is built (or replayed) via this cache
         if cache_dir is not None:
             ops.set_saturation_cache(cache_dir)
+        if verify is not None:
+            ops.set_saturation_verify(verify)
         arch = ARCH_IDS.get(arch, arch)
         self.cfg = get_smoke_config(arch) if smoke else get_config(arch)
         self.model = get_model(self.cfg)
@@ -115,10 +119,17 @@ def main(argv=None):
                     help="persistent saturation cache directory")
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the on-disk saturation cache")
+    ap.add_argument("--verify", default=None,
+                    choices=["off", "cheap", "full"],
+                    help="static verification level for every kernel "
+                         "build (default: REPRO_VERIFY, else off)")
     args = ap.parse_args(argv)
 
-    cache_dir = None if args.no_cache else args.cache_dir
-    srv = Server(args.arch, smoke=args.smoke, cache_dir=cache_dir)
+    # one documented front door for the cache/verify side-channels:
+    # explicit arg > CLI flag > env var (REPRO_SAT_CACHE / REPRO_VERIFY)
+    sat = SaturatorConfig.from_env(flags=args)
+    srv = Server(args.arch, smoke=args.smoke,
+                 cache_dir=sat.cache_dir or None, verify=sat.verify)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
                     prompt=rng.integers(1, srv.cfg.vocab,

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.cache import default_cache_dir
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.core import SaturatorConfig
 from repro.core.telemetry import telemetry
 from repro.data import DataConfig, ShardedTokenPipeline
 from repro.kernels import ops
@@ -36,12 +37,15 @@ def build_trainer(arch: str, *, smoke: bool, steps: int, batch: int,
                   seq: int, ckpt_dir: str, compress: str = "none",
                   inject: Optional[dict] = None, lr: float = 3e-4,
                   num_shards: int = 1, seed: int = 0,
-                  cache_dir: Optional[str] = None) -> ElasticTrainer:
+                  cache_dir: Optional[str] = None,
+                  verify: Optional[str] = None) -> ElasticTrainer:
     # persist saturation results (norm/optimizer tile ops) across runs:
     # a restarted or elastically-recovered job replays committed kernels
     # instead of re-searching
     if cache_dir is not None:
         ops.set_saturation_cache(cache_dir)
+    if verify is not None:
+        ops.set_saturation_verify(verify)
     arch = ARCH_IDS.get(arch, arch)
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     model = get_model(cfg)
@@ -110,16 +114,23 @@ def main(argv=None):
                          "(user-private by default)")
     ap.add_argument("--no-cache", action="store_true",
                     help="disable the on-disk saturation cache")
+    ap.add_argument("--verify", default=None,
+                    choices=["off", "cheap", "full"],
+                    help="static verification level for every kernel "
+                         "build (default: REPRO_VERIFY, else off)")
     args = ap.parse_args(argv)
 
     inject = {args.inject_failure_at: ("node_loss", 1)} \
         if args.inject_failure_at else None
+    # one documented front door for the cache/verify side-channels:
+    # explicit arg > CLI flag > env var (REPRO_SAT_CACHE / REPRO_VERIFY)
+    sat = SaturatorConfig.from_env(flags=args)
     trainer = build_trainer(args.arch, smoke=args.smoke, steps=args.steps,
                             batch=args.batch, seq=args.seq,
                             ckpt_dir=args.ckpt_dir, lr=args.lr,
                             compress=args.compress, inject=inject,
-                            cache_dir=None if args.no_cache
-                            else args.cache_dir)
+                            cache_dir=sat.cache_dir or None,
+                            verify=sat.verify)
     t0 = time.time()
     out = trainer.run()
     losses = out["losses"]

@@ -31,7 +31,8 @@ from .egraph_check import check_egraph
 from .findings import (PASS_CODEGEN, PASS_EGRAPH, PASS_RULES, PASS_SCHEDULE,
                        SEVERITIES, Finding, VerifyReport)
 from .rules_check import RuleRecord, RulesCheckResult, verify_rules
-from .schedule_check import ScheduleCheckResult, verify_schedule
+from .schedule_check import (ScheduleCheckResult, verify_async_plan,
+                             verify_schedule)
 
 VERIFY_LEVELS = ("off", "cheap", "full")
 
@@ -40,7 +41,8 @@ __all__ = [
     "PASS_RULES", "PASS_EGRAPH", "PASS_SCHEDULE", "PASS_CODEGEN",
     "verify_rules", "RulesCheckResult", "RuleRecord",
     "check_egraph", "verify_schedule", "ScheduleCheckResult",
-    "check_generated", "shapes_of", "verify_saturated",
+    "verify_async_plan", "check_generated", "shapes_of",
+    "verify_saturated", "verify_pallas_kernel",
 ]
 
 
@@ -102,6 +104,30 @@ def verify_saturated(sk, level: Optional[str] = None) -> VerifyReport:
         rep.extend(rres.findings)
         rep.rules_checked += rres.rules_checked
 
+    from repro.core.telemetry import telemetry
+    telemetry().record_verify(rep)
+    return rep
+
+
+def verify_pallas_kernel(pk, ssa) -> VerifyReport:
+    """Certify one emitted :class:`PallasKernel` (PR 8).
+
+    Lints the kernel source (and, for the pipelined emitter, the
+    synchronous fallback source under the ``:fallback`` subject — the
+    async-pairing checks in :mod:`.codegen_check` run on both), then
+    cross-checks the recorded async-copy plan against the schedule with
+    :func:`verify_async_plan`: start slots, wait domination, semaphore
+    parity and the ≤2-in-flight double-buffer bound."""
+    rep = VerifyReport()
+    shapes = shapes_of(ssa.prog)
+    rep.extend(check_generated(pk.source, shapes, subject=pk.name))
+    rep.sources_checked += 1
+    if pk.fallback_source is not None:
+        rep.extend(check_generated(pk.fallback_source, shapes,
+                                   subject=f"{pk.name}:fallback"))
+        rep.sources_checked += 1
+    if pk.async_plan and pk.schedule is not None:
+        rep.extend(verify_async_plan(ssa, pk.schedule, pk.async_plan))
     from repro.core.telemetry import telemetry
     telemetry().record_verify(rep)
     return rep

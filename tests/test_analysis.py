@@ -7,7 +7,8 @@ from repro.analysis import (LatencyModel, OpStats, RooflineCostModel,
                             TILE_ELEMS, node_stats, stats_from_hlo)
 from repro.analysis.opstats import (FREE_OPS, INPUT_OPS, MEMORY_OPS,
                                     SERIAL_ARITH, TRANSCENDENTALS)
-from repro.core import (CostModel, EGraph, SaturatorConfig, TPUCostModel,
+from repro.core import (CostModel, EGraph, SaturatorConfig,
+                        SearchConfig, TPUCostModel,
                         add_expr, extract_dag, saturate_program)
 from repro.core.extract import choice_nodes, dag_cost_of
 from repro.core.hardware import DEFAULT_CHIP
@@ -143,10 +144,11 @@ def _latency_of(eg, choice, roots):
 def test_roofline_extraction_never_slower_than_paper(kernel):
     from benchmarks.kernel_suite import SUITE
     prog = SUITE[kernel]()
+    lim = SearchConfig(iter_limit=6, node_limit=4000)
     sk_paper = saturate_program(prog, SaturatorConfig(
-        mode="accsat", cost_model="paper", iter_limit=6, node_limit=4000))
+        mode="accsat", cost_model="paper", search_cfg=lim))
     sk_roof = saturate_program(prog, SaturatorConfig(
-        mode="accsat", cost_model="roofline", iter_limit=6, node_limit=4000))
+        mode="accsat", cost_model="roofline", search_cfg=lim))
     eg_p, ex_p = sk_paper.ssa.egraph, sk_paper.extraction
     eg_r, ex_r = sk_roof.ssa.egraph, sk_roof.extraction
     lat_paper = _latency_of(eg_p, ex_p.choice, ex_p.roots)
@@ -164,12 +166,13 @@ def test_roofline_extraction_never_slower_than_paper(kernel):
 def test_roofline_extraction_never_slower_tile_programs(name):
     from repro.kernels.tile_programs import PROGRAMS
     prog = PROGRAMS[name]()
+    lim = SearchConfig(iter_limit=6, node_limit=4000)
     sk_paper = saturate_program(prog, SaturatorConfig(
         mode="accsat", cost_model="tpu_v5e", tpu_rules=True,
-        iter_limit=6, node_limit=4000))
+        search_cfg=lim))
     sk_roof = saturate_program(prog, SaturatorConfig(
         mode="accsat", cost_model="roofline", tpu_rules=True,
-        iter_limit=6, node_limit=4000))
+        search_cfg=lim))
     lat_paper = _latency_of(sk_paper.ssa.egraph, sk_paper.extraction.choice,
                             sk_paper.extraction.roots)
     lat_roof = _latency_of(sk_roof.ssa.egraph, sk_roof.extraction.choice,

@@ -16,7 +16,8 @@ from repro.analysis import (DEFAULT_PARAMS, ArrayInfo, CalibrationError,
                             fit_profile, kernel_features, load_profile,
                             mape_pct, predict_ns, spearman)
 from repro.analysis.calibrate import SCHEMA_VERSION
-from repro.core import EGraph, SaturatorConfig, add_expr, extract_dag, \
+from repro.core import EGraph, SaturatorConfig, ScheduleConfig, \
+    add_expr, extract_dag, \
     saturate_program
 from repro.core.pipeline import predict_choice
 
@@ -270,7 +271,8 @@ def test_device_profile_threads_through_pipeline():
         name="synthetic_slow", chip="test", measured_kind="synthetic",
         params=CalibrationParams(hbm_efficiency=1e-6, base_ns=123.0))
     sk = saturate_program(swiglu_program(),
-                          SaturatorConfig(device_profile=prof))
+                          SaturatorConfig(schedule_cfg=ScheduleConfig(
+                              device_profile=prof)))
     rep = sk.report()
     assert rep["device_profile"] == "synthetic_slow"
     base = saturate_program(swiglu_program(), SaturatorConfig())

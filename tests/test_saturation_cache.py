@@ -12,9 +12,10 @@ import threading
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (KernelProgram, SaturatorConfig, maybe_saturate,
-                        reset_telemetry, rmean, rsqrt, saturate_program,
-                        telemetry)
+from repro.core import (CacheConfig, KernelProgram, SaturatorConfig,
+                        ScheduleConfig, SearchConfig, VerifyConfig,
+                        maybe_saturate, reset_telemetry, rmean, rsqrt,
+                        saturate_program, telemetry)
 from repro.cache import (FORMAT_VERSION, SaturationCache, cache_key_for,
                          entry_digest)
 
@@ -33,11 +34,18 @@ def _norm_prog(tile=(8, 128)):
     return p
 
 
-def _cfg(tmp_path, **kw):
-    kw.setdefault("mode", "accsat")
-    kw.setdefault("tpu_rules", True)
-    kw.setdefault("cost_model", "tpu_v5e")
-    return SaturatorConfig(cache_dir=str(tmp_path), **kw)
+def _cfg(tmp_path, *, mode="accsat", tpu_rules=True, cost_model="tpu_v5e",
+         schedule=None, verify="off", cache_warm_start=True,
+         beam_width=None):
+    search = (SearchConfig(beam_width=beam_width)
+              if beam_width is not None else SearchConfig())
+    return SaturatorConfig(
+        mode=mode, tpu_rules=tpu_rules, cost_model=cost_model,
+        search_cfg=search,
+        schedule_cfg=ScheduleConfig(schedule=schedule),
+        cache_cfg=CacheConfig(cache_dir=str(tmp_path),
+                              cache_warm_start=cache_warm_start),
+        verify_cfg=VerifyConfig(verify=verify))
 
 
 def _entry_files(tmp_path):
@@ -309,7 +317,8 @@ def test_warm_graft_failure_falls_back_clean(tmp_path):
     nocache = saturate_program(
         _norm_prog((16, 128)),
         SaturatorConfig(mode="accsat", tpu_rules=True,
-                        cost_model="tpu_v5e", schedule="cost"))
+                        cost_model="tpu_v5e",
+                        schedule_cfg=ScheduleConfig(schedule="cost")))
     assert poisoned.kernel.source == nocache.kernel.source
 
 
@@ -326,9 +335,10 @@ def test_profile_refit_invalidates_key(tmp_path):
                       ).save(prof_path)
 
     save(0.0)
-    cfg = SaturatorConfig(mode="accsat", cost_model="roofline",
-                          device_profile=str(prof_path),
-                          cache_dir=str(tmp_path / "c"))
+    cfg = SaturatorConfig(
+        mode="accsat", cost_model="roofline",
+        schedule_cfg=ScheduleConfig(device_profile=str(prof_path)),
+        cache_cfg=CacheConfig(cache_dir=str(tmp_path / "c")))
     k1 = cache_key_for(_norm_prog(), cfg)
     assert cache_key_for(_norm_prog(), cfg).warm_key == k1.warm_key
     save(5.0)
@@ -354,10 +364,12 @@ def test_unwritable_cache_dir_is_nonfatal(tmp_path):
 # -- cross-process ----------------------------------------------------------
 _SUB = """
 import hashlib, sys
-from repro.core import SaturatorConfig, saturate_program
+from repro.core import (CacheConfig, SaturatorConfig, ScheduleConfig,
+                        saturate_program)
 from repro.kernels.tile_programs import PROGRAMS
 cfg = SaturatorConfig(mode="accsat", tpu_rules=True, cost_model="tpu_v5e",
-                      schedule="cost", cache_dir=sys.argv[1])
+                      schedule_cfg=ScheduleConfig(schedule="cost"),
+                      cache_cfg=CacheConfig(cache_dir=sys.argv[1]))
 sk = saturate_program(PROGRAMS["rmsnorm_gated"](), cfg)
 print("CACHE", sk.cache_status,
       hashlib.sha256(sk.kernel.source.encode()).hexdigest())

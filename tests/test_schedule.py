@@ -18,10 +18,11 @@ from _hypothesis_compat import given, settings, st
 from repro.analysis import (CalibrationParams, KernelFeatures, LatencyModel,
                             RooflineCostModel, fit_params, predict_ns)
 from repro.analysis.latency import ScheduleEvent
-from repro.core import (KernelProgram, SaturatorConfig, c, compute_schedule,
-                        is_legal_order, random_topological_order,
-                        run_reference, saturate_program, v)
-from repro.core.codegen import CodeGenerator
+from repro.core import (KernelProgram, SaturatorConfig, ScheduleConfig, c,
+                        compute_schedule, is_legal_order,
+                        random_topological_order, run_reference,
+                        saturate_program, v)
+from repro.core.codegen import JaxCodeGenerator
 from repro.core.schedule import SCHEDULE_MODES
 from repro.kernels.tile_programs import PROGRAMS
 
@@ -73,7 +74,7 @@ def test_random_legal_orders_bit_identical(seed):
     rnd = _randomized(sr, rng)
     for rs in rnd.regions.values():
         assert is_legal_order(rs.units, rs.order)
-    gen = CodeGenerator(sk.ssa, sk.extraction, schedule=rnd)
+    gen = JaxCodeGenerator(sk.ssa, sk.extraction, schedule=rnd)
     k = gen.generate()
     out = _run_jax_kernel(sk, k, sk.ssa.prog)
     for a, b in zip(ref_out, out):
@@ -91,7 +92,7 @@ def test_random_orders_match_reference_interpreter(seed):
     sk = saturate_program(prog, SaturatorConfig(mode="accsat"))
     sr = compute_schedule(sk.ssa, dict(sk.extraction.choice), mode="cost")
     rnd = _randomized(sr, rng)
-    k = CodeGenerator(sk.ssa, sk.extraction, schedule=rnd).generate()
+    k = JaxCodeGenerator(sk.ssa, sk.extraction, schedule=rnd).generate()
     arrays, scalars = _tile_inputs(prog)
     inputs = {}
     ai = iter(arrays)
@@ -131,7 +132,7 @@ def test_loop_kernel_random_orders(rng):
     sr = compute_schedule(sk.ssa, dict(sk.extraction.choice), mode="cost")
     for seed in range(5):
         rnd = _randomized(sr, np.random.default_rng(seed))
-        k = CodeGenerator(sk.ssa, sk.extraction, schedule=rnd).generate()
+        k = JaxCodeGenerator(sk.ssa, sk.extraction, schedule=rnd).generate()
         out = np.asarray(k.fn(jnp.asarray(X), jnp.zeros(6, np.float32),
                               6, 2)[0])
         assert (out == base_out).all()
@@ -160,9 +161,10 @@ def test_bulk_schedule_bit_identical_sources():
     for name in ("rmsnorm", "adamw", "softmax"):
         legacy = saturate_program(PROGRAMS[name](),
                                   SaturatorConfig(mode="accsat"))
-        sched = saturate_program(PROGRAMS[name](),
-                                 SaturatorConfig(mode="accsat",
-                                                 schedule="bulk"))
+        sched = saturate_program(
+            PROGRAMS[name](),
+            SaturatorConfig(mode="accsat",
+                            schedule_cfg=ScheduleConfig(schedule="bulk")))
         assert legacy.kernel.source == sched.kernel.source
         assert sched.kernel.schedule_mode == "bulk"
 
@@ -170,10 +172,11 @@ def test_bulk_schedule_bit_identical_sources():
 def test_source_schedule_matches_nonbulk_legacy():
     """schedule="source" under accsat equals the legacy bulk=False
     emission (loads at use sites)."""
-    sk = saturate_program(PROGRAMS["rmsnorm"](),
-                          SaturatorConfig(mode="accsat",
-                                          schedule="source"))
-    gen = CodeGenerator(sk.ssa, sk.extraction, bulk=False)
+    sk = saturate_program(
+        PROGRAMS["rmsnorm"](),
+        SaturatorConfig(mode="accsat",
+                        schedule_cfg=ScheduleConfig(schedule="source")))
+    gen = JaxCodeGenerator(sk.ssa, sk.extraction, bulk=False)
     assert sk.kernel.source == gen.generate().source
 
 
@@ -181,9 +184,10 @@ def test_cost_schedule_outputs_match_bulk():
     for name in TILE_NAMES:
         bulk = saturate_program(PROGRAMS[name](),
                                 SaturatorConfig(mode="accsat"))
-        cost = saturate_program(PROGRAMS[name](),
-                                SaturatorConfig(mode="accsat",
-                                                schedule="cost"))
+        cost = saturate_program(
+            PROGRAMS[name](),
+            SaturatorConfig(mode="accsat",
+                            schedule_cfg=ScheduleConfig(schedule="cost")))
         a = _run_jax_kernel(bulk, bulk.kernel, bulk.ssa.prog)
         b = _run_jax_kernel(cost, cost.kernel, cost.ssa.prog)
         for x, y in zip(a, b):
@@ -194,10 +198,11 @@ def test_cost_schedule_outputs_match_bulk():
 
 def test_invalid_schedule_mode_rejected():
     with pytest.raises(ValueError, match="schedule"):
-        SaturatorConfig(mode="accsat", schedule="random")
+        SaturatorConfig(mode="accsat",
+                        schedule_cfg=ScheduleConfig(schedule="random"))
     sk = saturate_program(PROGRAMS["rmsnorm"](), SaturatorConfig())
     with pytest.raises(ValueError, match="schedule"):
-        CodeGenerator(sk.ssa, sk.extraction, schedule="zigzag")
+        JaxCodeGenerator(sk.ssa, sk.extraction, schedule="zigzag")
 
 
 # -- the schedule-aware objective -------------------------------------------
@@ -315,8 +320,10 @@ def test_fit_recovers_overlap_efficiency():
 
 
 def test_schedule_report_fields():
-    sk = saturate_program(PROGRAMS["rmsnorm"](),
-                          SaturatorConfig(mode="accsat", schedule="cost"))
+    sk = saturate_program(
+        PROGRAMS["rmsnorm"](),
+        SaturatorConfig(mode="accsat",
+                        schedule_cfg=ScheduleConfig(schedule="cost")))
     rep = sk.report()
     assert rep["schedule"] == "cost"
     assert rep["schedule_predicted_ns"] is not None

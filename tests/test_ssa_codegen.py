@@ -8,7 +8,8 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (KernelProgram, MODES, SaturatorConfig, c,
+from repro.core import (KernelProgram, MODES, SaturatorConfig,
+                        SearchConfig, c,
                         run_reference, rsqrt, rmean, saturate_all_modes,
                         saturate_program, select, v)
 
@@ -160,8 +161,8 @@ def test_loop_carried_array():
 
 def test_saturation_limits_respected():
     p = stencil_program()
-    cfg = SaturatorConfig(mode="accsat", iter_limit=2, node_limit=50,
-                          time_limit_s=1.0)
+    cfg = SaturatorConfig(mode="accsat", search_cfg=SearchConfig(
+        iter_limit=2, node_limit=50, time_limit_s=1.0))
     sk = saturate_program(p, cfg)
     assert sk.saturation.iterations <= 2
     rep = sk.report()

@@ -1,0 +1,123 @@
+"""PR-8 deprecation lint: keep the repo's own code off the legacy API.
+
+Two things were deprecated by the emitter/config split and kept only as
+compatibility shims for external callers:
+
+* the pre-registry generator class names ``CodeGenerator`` /
+  ``PallasGenerator`` (use ``repro.core.emit.get_emitter(...)`` or the
+  renamed classes ``JaxCodeGenerator`` / ``SyncPallasGenerator``);
+* the flat ``SaturatorConfig(...)`` keyword arguments (``schedule=``,
+  ``beam_width=``, ``cache_dir=``, ... — use the grouped
+  ``search_cfg`` / ``schedule_cfg`` / ``cache_cfg`` / ``verify_cfg``
+  sub-configs).
+
+This script AST-scans ``src``, ``benchmarks``, ``tests`` and
+``examples`` and fails on any use of either, so the shims never creep
+back into first-party code. Intentional uses (the defining modules, the
+tests that pin the deprecation behaviour itself) carry a
+``# deprecated-ok`` comment on the offending line.
+
+Run from the repo root:
+    python tools/deprecation_lint.py
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+SCAN_DIRS = ("src", "benchmarks", "tests", "examples", "tools")
+
+# the modules that define/alias/document the deprecated names
+DEFINING = {
+    ROOT / "src/repro/core/codegen.py",
+    ROOT / "src/repro/core/pallasgen.py",
+    ROOT / "src/repro/core/emit.py",
+    ROOT / "src/repro/core/pipeline.py",
+    ROOT / "tools/deprecation_lint.py",
+}
+
+OLD_CLASS_NAMES = {"CodeGenerator", "PallasGenerator"}
+
+# mirror repro.core.pipeline._LEGACY_TO_GROUP without importing repro
+# (the lint must run under a bare CI python, pre-dependency-install)
+LEGACY_KWARGS = {
+    "iter_limit", "node_limit", "time_limit_s", "extract_time_limit_s",
+    "local_search", "search", "beam_width", "beam_expansions",
+    "hillclimb_evals", "beam_coordinated", "schedule", "device_profile",
+    "cache_dir", "cache_warm_start", "verify",
+}
+
+
+def _ok_lines(text: str) -> set:
+    return {i for i, line in enumerate(text.splitlines(), 1)
+            if "# deprecated-ok" in line}
+
+
+def lint_file(path: pathlib.Path) -> list:
+    text = path.read_text()
+    try:
+        tree = ast.parse(text, filename=str(path))
+    except SyntaxError as e:
+        return [f"{path}:{e.lineno}: syntax error: {e.msg}"]
+    ok = _ok_lines(text)
+    rel = path.relative_to(ROOT)
+    problems = []
+    for node in ast.walk(tree):
+        # old class names, as bare names or attribute access; alias
+        # re-exports (`from x import PallasGenerator`) count too
+        name = None
+        if isinstance(node, ast.Name) and node.id in OLD_CLASS_NAMES:
+            name = node.id
+        elif isinstance(node, ast.Attribute) and node.attr in OLD_CLASS_NAMES:
+            name = node.attr
+        elif isinstance(node, ast.ImportFrom):
+            for alias in node.names:
+                if alias.name in OLD_CLASS_NAMES:
+                    name = alias.name
+        if name is not None and node.lineno not in ok:
+            problems.append(
+                f"{rel}:{node.lineno}: deprecated class name {name!r} "
+                f"(use repro.core.emit.get_emitter or the renamed class)")
+        # flat SaturatorConfig kwargs
+        if isinstance(node, ast.Call):
+            callee = node.func
+            cname = (callee.id if isinstance(callee, ast.Name)
+                     else callee.attr if isinstance(callee, ast.Attribute)
+                     else None)
+            if cname == "SaturatorConfig":
+                for kw in node.keywords:
+                    if kw.arg in LEGACY_KWARGS and \
+                            (kw.value.lineno not in ok and
+                             node.lineno not in ok):
+                        problems.append(
+                            f"{rel}:{kw.value.lineno}: deprecated flat "
+                            f"SaturatorConfig kwarg {kw.arg!r} (use the "
+                            f"grouped sub-config)")
+    return problems
+
+
+def main() -> int:
+    problems = []
+    for d in SCAN_DIRS:
+        base = ROOT / d
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            if path in DEFINING:
+                continue
+            problems.extend(lint_file(path))
+    if problems:
+        print(f"deprecation lint: {len(problems)} problem(s)",
+              file=sys.stderr)
+        for p in problems:
+            print(f"  {p}", file=sys.stderr)
+        return 1
+    print("deprecation lint OK: no first-party use of deprecated "
+          "generator names or flat SaturatorConfig kwargs")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
