@@ -87,12 +87,14 @@ CURRENT = OUT_ROOT / "bench_current.json"
 BEAM_STATS = OUT_ROOT / "beam_stats.json"
 BENCH5 = ROOT / "BENCH_5.json"
 BENCH6 = ROOT / "BENCH_6.json"
+BENCH9 = ROOT / "BENCH_9.json"
 SCHED_PROFILE = "cpu_pallas_interpret_sched"   # PR-5 schedule-aware fit
 BASE_PROFILE = "cpu_pallas_interpret"          # PR-4 bulk-order fit
 
 BASELINE_SCHEMA_VERSION = 3   # 2 = PR 4 (no schedule block); 1 = PR 3
 BENCH5_SCHEMA_VERSION = 1
 BENCH6_SCHEMA_VERSION = 1
+BENCH9_SCHEMA_VERSION = 1
 BENCH6_REPLAY_FLOOR = 10.0   # committed cold/replay saturation speedup
 TOLERANCE_PCT = 2.0
 ABS_EPS = 1e-6          # ignore float dust on tiny costs
@@ -362,6 +364,63 @@ def check_bench6() -> list:
     return failures
 
 
+def check_bench9() -> list:
+    """Drift check for the committed PR-9 tuning summary (BENCH_9.json).
+
+    Winners are measured, hence machine-dependent — they are validated
+    structurally (a legal, sublane-aligned survivor). The *static* half
+    is recomputed exactly: candidate/pruned counts, prune reasons, and
+    survivor sets come from ``benchmarks.tune.static_prune`` (grid-pass
+    legality + headroom budget), so any change to the candidate list,
+    the prune rules, or the verifier's legality verdicts shows up as
+    drift against the committed document."""
+    if not BENCH9.exists():
+        return [f"missing {BENCH9}; regenerate with `PYTHONPATH=src "
+                "python benchmarks/tune.py --update-bench` and commit it"]
+    try:
+        doc = json.loads(BENCH9.read_text())
+    except json.JSONDecodeError as e:
+        return [f"{BENCH9.name}: invalid JSON: {e}"]
+    ver = doc.get("schema_version")
+    if ver != BENCH9_SCHEMA_VERSION:
+        return [f"{BENCH9.name}: schema_version {ver!r}, expected "
+                f"{BENCH9_SCHEMA_VERSION} — regenerate and commit"]
+    from benchmarks.tune import static_prune
+    rows = doc.get("rows")
+    kernels = doc.get("kernels") or {}
+    failures = []
+    if not kernels:
+        return [f"{BENCH9.name}: no kernels section"]
+    for name, rec in sorted(kernels.items()):
+        cur = static_prune(name, rows=rows)
+        for key in ("n_candidates", "n_pruned", "pruned_reasons",
+                    "survivors", "default_row_block"):
+            if rec.get(key) != cur[key]:
+                failures.append(
+                    f"{BENCH9.name}: {name}.{key} drifted — committed "
+                    f"{rec.get(key)!r}, recomputed {cur[key]!r}")
+        win = rec.get("winner_row_block")
+        if win is not None:
+            if win not in cur["survivors"]:
+                failures.append(f"{BENCH9.name}: {name} winner {win} is "
+                                "not a legal survivor")
+            elif win % 8:
+                failures.append(f"{BENCH9.name}: {name} winner {win} is "
+                                "not sublane-aligned")
+    if not failures:
+        total = sum(r["n_pruned"] for r in kernels.values())
+        avg = total / len(kernels)
+        if avg < 1.0:
+            failures.append(
+                f"{BENCH9.name}: avg {avg:.2f} candidates pruned per "
+                "kernel — the static filter prunes nothing")
+        else:
+            print(f"  BENCH_9 ok: {len(kernels)} kernels, avg {avg:.1f} "
+                  f"candidates statically pruned, winners all legal "
+                  f"survivors")
+    return failures
+
+
 def check_pipelined() -> list:
     """PR-8 pipelined-emitter leg (deterministic — no timing): over a
     kernel subset, the ``pallas_pipelined`` emitter's interpret fallback
@@ -455,6 +514,8 @@ def main() -> int:
     failures += check_pipelined()
     print("BENCH_6 serve-decode cache report:")
     failures += check_bench6()
+    print("BENCH_9 statically-pruned block tuning:")
+    failures += check_bench9()
     if failures:
         print(f"\nFAIL: {len(failures)} regression(s) "
               f"(tolerance {TOLERANCE_PCT}%):", file=sys.stderr)

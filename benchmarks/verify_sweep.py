@@ -10,7 +10,13 @@ statement orders with ``repro.verify``:
   **generated-code AST pass** over both the JAX source and — for
   tilable programs — the Pallas source;
 * per rule set: **rule soundness** (random/bf16/adversarial
-  differential validation).
+  differential validation);
+* per (kernel, schedule mode, Pallas emitter): the **grid pass** (PR 9)
+  — the emitted kernel's ``plan_tile_call`` launch plan is certified
+  coverage-complete, write-disjoint, in-bounds (padded remainder tile
+  modeled) and inside the exact VMEM budget, at a geometry that forces
+  a ragged remainder tile. The hand-written flash-attention and
+  SSD-scan BlockSpec layouts are audited once through the same engine.
 
 Exit status is non-zero on any error-severity finding, so CI's
 ``verify-smoke`` job (a 3-kernel subset via ``--kernels``) gates on
@@ -21,20 +27,24 @@ zero errors. Run the full sweep with::
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import sys
 from typing import Dict, List
 
 from repro.core import (SaturatorConfig, SearchConfig, compute_schedule,
-                        saturate_program)
+                        get_emitter, saturate_program)
 from repro.core.pallasgen import SyncPallasGenerator
 from repro.core.pipeline import _schedule_cm
 from repro.core.schedule import SCHEDULE_MODES
 from repro.kernels.tile_programs import PROGRAMS
 from repro.verify import (VerifyReport, check_egraph, check_generated,
-                          shapes_of, verify_rules, verify_schedule)
+                          check_grid, flash_attention_model, shapes_of,
+                          ssd_scan_model, verify_rules, verify_schedule)
+from repro.verify.grid_check import check_tile_kernel_grid
 
 RULE_SETS = ("paper", "extended")
+GRID_EMITTERS = ("pallas", "pallas_pipelined")
 
 
 def _config(rule_set: str) -> SaturatorConfig:
@@ -59,6 +69,8 @@ def sweep(kernels: List[str]) -> Dict:
             kfs = list(check_egraph(sk.ssa.egraph))
             report.egraphs_checked += 1
             certified = 0
+            grids = 0
+            scheds = {}
             for mode in SCHEDULE_MODES:
                 # searchless for source/bulk — certify exactly the order
                 # the legacy emitters/cache replay; the cost mode keeps
@@ -68,6 +80,7 @@ def sweep(kernels: List[str]) -> Dict:
                     sk.ssa, dict(sk.extraction.choice), mode=mode,
                     cost_model=_schedule_cm(cfg, prog, sk.ssa.egraph),
                     **kw)
+                scheds[mode] = sched
                 scr = verify_schedule(sk.ssa, sk.extraction.choice, sched)
                 kfs.extend(scr.findings)
                 certified += scr.regions_certified
@@ -83,16 +96,53 @@ def sweep(kernels: List[str]) -> Dict:
                 kfs.extend(check_generated(pk.source, shapes_of(prog),
                                            subject=f"{kname}:pallas"))
                 report.sources_checked += 1
+                # grid pass: one emission per (schedule mode, emitter)
+                # reuses the saturation above — geometry certification
+                # needs only the emitted kernel, not a fresh pipeline run
+                for mode, emitter in ((m, e) for m in SCHEDULE_MODES
+                                      for e in GRID_EMITTERS):
+                    epk = get_emitter(emitter).emit(
+                        sk.ssa, sk.extraction, bulk=True,
+                        schedule=scheds[mode])
+                    gres = check_tile_kernel_grid(epk, prog)
+                    kfs.extend(dataclasses.replace(
+                        f, subject=f"{mode}/{emitter}:{f.subject}")
+                        for f in gres.findings)
+                    grids += gres.grids_checked
             report.extend(kfs)
             report.schedules_certified += certified
+            report.grids_checked += grids
             errors = [f for f in kfs if f.severity == "error"]
             rows.append({
                 "kernel": kname, "rule_set": rule_set,
                 "schedules_certified": certified,
+                "grids_checked": grids,
                 "findings": len(kfs), "errors": len(errors),
             })
             for f in errors:
                 print(f"  {kname}/{rule_set}: {f}", file=sys.stderr)
+
+    # the hand-written Pallas kernels outside the saturator pipeline:
+    # their BlockSpec layouts (attention_layout / ssd_layout) feed the
+    # same symbolic engine. flash attention is the inert-axis case — the
+    # output map ignores the kv step, a legal revisit, not a race.
+    handwritten = (
+        ("flash_attention", flash_attention_model(2, 4, 2, 512, 128)),
+        ("ssd_scan", ssd_scan_model(2, 4, 512, 64, 128)),
+    )
+    for hname, model in handwritten:
+        gres = check_grid(model)
+        report.extend(gres.findings)
+        report.grids_checked += gres.grids_checked
+        errors = [f for f in gres.findings if f.severity == "error"]
+        rows.append({
+            "kernel": hname, "rule_set": "handwritten",
+            "schedules_certified": 0,
+            "grids_checked": gres.grids_checked,
+            "findings": len(gres.findings), "errors": len(errors),
+        })
+        for f in errors:
+            print(f"  {hname}: {f}", file=sys.stderr)
     out = report.summary()
     out["rows"] = rows
     out["kernels"] = list(kernels)
@@ -121,7 +171,8 @@ def main(argv=None) -> int:
     print(f"  rules_checked={summary['rules_checked']} "
           f"schedules_certified={summary['schedules_certified']} "
           f"egraphs={summary['egraphs_checked']} "
-          f"sources={summary['sources_checked']}")
+          f"sources={summary['sources_checked']} "
+          f"grids={summary['grids_checked']}")
     print(f"  findings: {sev['error']} error / {sev['warning']} warning "
           f"/ {sev['info']} info")
     if not summary["ok"]:

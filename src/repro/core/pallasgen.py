@@ -435,6 +435,71 @@ class TileOp:
                               interpret)
 
 
+def _row_index_map(i):
+    """Row-tiled operand: grid step ``i`` owns row-block ``i``."""
+    return (i, 0)
+
+
+def _bcast_index_map(i):
+    """Broadcast weight row: every grid step reads block (0, 0)."""
+    return (0, 0)
+
+
+@dataclasses.dataclass(frozen=True)
+class TileEntry:
+    """One operand of a planned tile-op ``pallas_call``."""
+    name: str
+    kind: str                            # "row" | "bcast"
+    block_shape: Tuple[int, int]
+    buffer_shape: Tuple[int, int]        # post-pad 2-D operand shape
+    index_map: Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class TileCallPlan:
+    """The launch geometry of one tile-op call: grid, per-operand block
+    shapes, buffer shapes (post-``_ceil_to`` padding) and index maps.
+
+    Built by :func:`plan_tile_call` and consumed by *both* the runtime
+    (``_apply_tile_op`` constructs its BlockSpecs from it) and the
+    static verifier (``repro.verify.grid_check`` certifies exactly this
+    plan) — one source of truth, so what is certified is what runs."""
+    rows: int
+    d: int
+    row_block: int
+    padded: int
+    grid: Tuple[int, ...]
+    inputs: Tuple[TileEntry, ...]
+    outputs: Tuple[TileEntry, ...]
+
+
+def plan_tile_call(pk: PallasKernel, in_shapes: Sequence[Tuple[int, ...]],
+                   row_block: int) -> TileCallPlan:
+    """Plan the grid/BlockSpec layout for ``pk`` over operands of the
+    given (pre-reshape) shapes. Inputs whose leading extents multiply to
+    the lead operand's row count tile over rows; anything else is a
+    broadcast weight row re-read by every grid step."""
+    lead = tuple(in_shapes[0])
+    d = lead[-1]
+    rows = math.prod(lead[:-1]) if len(lead) > 1 else 1
+    rb = min(row_block, rows)
+    padded = _ceil_to(rows, rb)
+    inputs = []
+    for name, shp in zip(pk.in_arrays, in_shapes):
+        if len(shp) >= 2 and math.prod(shp[:-1]) == rows:
+            inputs.append(TileEntry(name, "row", (rb, shp[-1]),
+                                    (padded, shp[-1]), _row_index_map))
+        else:
+            w = math.prod(shp)
+            inputs.append(TileEntry(name, "bcast", (1, w), (1, w),
+                                    _bcast_index_map))
+    outputs = tuple(TileEntry(name, "row", (rb, d), (padded, d),
+                              _row_index_map) for name in pk.out_arrays)
+    return TileCallPlan(rows=rows, d=d, row_block=rb, padded=padded,
+                        grid=(padded // rb,), inputs=tuple(inputs),
+                        outputs=outputs)
+
+
 def _apply_tile_op(op: TileOp, arrays, scalar_items, interpret: bool):
     pk = op.pk
     # pipelined kernels carry a synchronous twin: interpret mode (and
@@ -446,39 +511,28 @@ def _apply_tile_op(op: TileOp, arrays, scalar_items, interpret: bool):
     body_fn = pk.kernel_body if use_async else pk.fallback_body
     scalars = dict(scalar_items)
     lead = arrays[0]
-    d = lead.shape[-1]
-    rows = math.prod(lead.shape[:-1]) if lead.ndim > 1 else 1
-    row_block = min(op.row_block, rows)
-    # pad rows to a multiple of the block
-    padded = _ceil_to(rows, row_block)
+    plan = plan_tile_call(pk, [a.shape for a in arrays], op.row_block)
+    rows, padded, d = plan.rows, plan.padded, plan.d
     ins2d = []
-    for name, a in zip(pk.in_arrays, arrays):
-        if a.ndim >= 2 and math.prod(a.shape[:-1]) == rows:
+    for e, a in zip(plan.inputs, arrays):
+        if e.kind == "row":
             a2 = a.reshape(rows, a.shape[-1])
             if padded != rows:
                 a2 = jnp.pad(a2, ((0, padded - rows), (0, 0)))
-            ins2d.append(("row", a2))
         else:  # broadcast weight (g, b, ...) — same block every row-tile
-            ins2d.append(("bcast", a.reshape(1, -1)))
-    grid = (padded // row_block,)
+            a2 = a.reshape(1, -1)
+        ins2d.append(a2)
 
     def body(*refs):
         body_fn(*refs, **scalars)
 
-    in_specs = []
-    block_shapes = {}
-    for (kind, a2), name in zip(ins2d, pk.in_arrays):
-        if kind == "row":
-            in_specs.append(pl.BlockSpec((row_block, a2.shape[-1]),
-                                         lambda i: (i, 0)))
-            block_shapes[name] = (row_block, a2.shape[-1])
-        else:
-            in_specs.append(pl.BlockSpec((1, a2.shape[-1]), lambda i: (0, 0)))
-            block_shapes[name] = (1, a2.shape[-1])
-    out_specs = [pl.BlockSpec((row_block, d), lambda i: (i, 0))
-                 for _ in pk.out_arrays]
-    out_shapes = [jax.ShapeDtypeStruct((padded, d), lead.dtype)
-                  for _ in pk.out_arrays]
+    in_specs = [pl.BlockSpec(e.block_shape, e.index_map)
+                for e in plan.inputs]
+    block_shapes = {e.name: e.block_shape for e in plan.inputs}
+    out_specs = [pl.BlockSpec(e.block_shape, e.index_map)
+                 for e in plan.outputs]
+    out_shapes = [jax.ShapeDtypeStruct(e.buffer_shape, lead.dtype)
+                  for e in plan.outputs]
     scratch_shapes = None
     if use_async and pk.async_arrays:
         # one VMEM staging buffer per pipelined input (block-shaped) plus
@@ -486,6 +540,7 @@ def _apply_tile_op(op: TileOp, arrays, scalar_items, interpret: bool):
         scratch_shapes = [pltpu.VMEM(block_shapes[a], lead.dtype)
                           for a in pk.async_arrays]
         scratch_shapes += [pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA]
+    grid = plan.grid
     call = pl.pallas_call(
         body, grid=grid, in_specs=in_specs,
         out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
@@ -493,7 +548,7 @@ def _apply_tile_op(op: TileOp, arrays, scalar_items, interpret: bool):
         **({"scratch_shapes": scratch_shapes}
            if scratch_shapes is not None else {}),
         interpret=interpret)
-    outs = call(*[a2 for _, a2 in ins2d])
+    outs = call(*ins2d)
     if not isinstance(outs, (tuple, list)):
         outs = (outs,)
     outs = [o[:rows].reshape(lead.shape[:-1] + (d,)) for o in outs]
@@ -506,7 +561,13 @@ def _ceil_to(x: int, m: int) -> int:
 
 def vmem_estimate(row_block: int, d: int, n_tiles: int,
                   dtype_bytes: int = 4) -> int:
-    """Conservative VMEM working-set estimate for a tile kernel."""
+    """Conservative VMEM working-set estimate for a tile kernel.
+
+    A heuristic — ``n_tiles`` overcounts broadcast rows as full tiles.
+    The exact footprint (per-operand block shapes × double-buffer
+    multiplicity) lives in ``repro.verify.grid_check``, whose VMEM pass
+    flags configs where this estimate and the exact model disagree
+    (``vmem-heuristic-drift``)."""
     return row_block * d * dtype_bytes * n_tiles
 
 
@@ -516,12 +577,35 @@ def pick_row_block(d: int, n_tiles: int, dtype_bytes: int = 4,
 
     8 sublanes × 128 lanes is the fp32 native tile; we keep ~4x headroom
     for temporaries the compiler materializes (the TPU analogue of the
-    paper's register-pressure concern, §VIII)."""
+    paper's register-pressure concern, §VIII). ``dtype_bytes`` scales
+    the budget to the element width actually stored (bf16 tiles cost
+    half the VMEM of f32 — pass 2, not the f32 default)."""
     budget = chip.vmem_bytes // 4
     blk = 512
     while blk > 8 and vmem_estimate(blk, d, n_tiles, dtype_bytes) > budget:
         blk //= 2
     return max(blk, 8)
+
+
+def _declared_feature_dim(prog: KernelProgram) -> Optional[int]:
+    """Widest declared last-dim extent across the program's arrays
+    (None when nothing is declared — callers fall back to 256)."""
+    dims = [s.shape[-1] for s in prog.arrays.values()
+            if s.shape and s.shape[-1] is not None]
+    return max(dims) if dims else None
+
+
+def _declared_dtype_bytes(prog: KernelProgram) -> int:
+    """Widest declared element byte width — the conservative width for
+    the VMEM budget (arrays inherit the program default, f32)."""
+    from repro.analysis.opstats import dtype_byte_width
+    widths = []
+    for s in prog.arrays.values():
+        try:
+            widths.append(dtype_byte_width(s.dtype))
+        except ValueError:
+            pass   # unknown dtype name: budget it as f32 below
+    return max(widths, default=4)
 
 
 def make_tile_op(prog: KernelProgram,
@@ -574,6 +658,19 @@ def make_tile_op(prog: KernelProgram,
         return out[0] if len(out) == 1 else out
 
     n_tiles = len(pk.in_arrays) + len(pk.out_arrays) + 2
-    rb = row_block or pick_row_block(256, n_tiles)
-    return TileOp(name=prog.name, pk=pk, jax_ref=jax_ref, row_block=rb,
-                  source=pk.source, sk=sk)
+    # autosize from the *declared* operand geometry: the feature width
+    # and element byte width the program actually stores, not the
+    # hardcoded (256, f32) the pre-PR-9 heuristic assumed — a d=1024
+    # f32 program now picks a smaller, VMEM-fitting block while bf16
+    # keeps the larger one its halved bytes afford
+    rb = row_block or pick_row_block(_declared_feature_dim(prog) or 256,
+                                     n_tiles, _declared_dtype_bytes(prog))
+    op = TileOp(name=prog.name, pk=pk, jax_ref=jax_ref, row_block=rb,
+                source=pk.source, sk=sk)
+    if cfg.verify != "off":
+        # the grid pass (PR 9): statically certify the launch plan this
+        # op will run — coverage, write disjointness, bounds (incl. the
+        # pad region), exact VMEM fit — before anything executes
+        from repro.verify import verify_tile_op
+        verify_tile_op(op)
+    return op

@@ -46,6 +46,7 @@ class SaturationTelemetry:
         default_factory=dict)   # pass name -> finding count
     rules_checked: int = 0
     schedules_certified: int = 0
+    grids_checked: int = 0
     events: Deque[Dict[str, Any]] = dataclasses.field(
         default_factory=lambda: deque(maxlen=EVENT_LIMIT))
 
@@ -98,6 +99,7 @@ class SaturationTelemetry:
                     self.verify_errors += 1
             self.rules_checked += report.rules_checked
             self.schedules_certified += report.schedules_certified
+            self.grids_checked += getattr(report, "grids_checked", 0)
             if not report.ok:
                 self.events.append({"kind": "verify_errors",
                                     "errors": [str(f) for f
@@ -128,6 +130,7 @@ class SaturationTelemetry:
                         self.verify_findings_by_pass.items())),
                     "rules_checked": self.rules_checked,
                     "schedules_certified": self.schedules_certified,
+                    "grids_checked": self.grids_checked,
                 },
             }
 
@@ -141,6 +144,7 @@ class SaturationTelemetry:
             self.verify_runs = self.verify_errors = 0
             self.verify_findings_by_pass.clear()
             self.rules_checked = self.schedules_certified = 0
+            self.grids_checked = 0
             self.events.clear()
 
 

@@ -28,6 +28,41 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def attention_layout(B: int, H: int, KH: int, S: int, D: int,
+                     q_block: int, kv_block: int) -> dict:
+    """The launch geometry of :func:`flash_attention`, as data.
+
+    One source of truth shared by the ``pallas_call`` below and the
+    static grid verifier (``repro.verify.grid_check`` certifies exactly
+    these index maps): per operand a ``(block_shape, array_shape,
+    index_map)`` triple over the grid ``(B*H, q_steps, kv_steps)``.
+
+    The output map ignores ``ki`` — every kv step of one (bh, qi) pair
+    revisits the same output block, finalized on the last step; the
+    verifier's inert-axis analysis proves that a legal revisit, not a
+    write-write race. K/V indexing is GQA-aware: ``bh // H`` recovers
+    the batch, ``(bh % H) // group`` the kv head."""
+    assert H % KH == 0, "query heads must be a multiple of kv heads"
+    group = H // KH
+    q_steps, kv_steps = S // q_block, S // kv_block
+
+    def q_map(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_map(bh, qi, ki):
+        return (bh // H, (bh % H) // group, ki, 0)
+
+    return {
+        "grid": (B * H, q_steps, kv_steps),
+        "q": ((1, q_block, D), (B * H, S, D), q_map),
+        "k": ((1, 1, kv_block, D), (B, KH, S, D), kv_map),
+        "v": ((1, 1, kv_block, D), (B, KH, S, D), kv_map),
+        "o": ((1, q_block, D), (B * H, S, D), q_map),
+        # m/l accumulators (q_block, 128) + the (q_block, D) f32 acc
+        "scratch_bytes": (q_block * 128 * 2 + q_block * D) * 4,
+    }
+
+
 def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
                  scale: float, causal: bool, q_block: int, kv_block: int,
                  kv_steps: int):
@@ -94,18 +129,16 @@ def flash_attention(q, k, v, *, causal: bool = True,
     """q:(B,H,S,D) k/v:(B,KH,S,D) → (B,H,S,D). GQA when KH < H."""
     B, H, S, D = q.shape
     KH = k.shape[1]
-    assert H % KH == 0, "query heads must be a multiple of kv heads"
-    group = H // KH
     scale = (D ** -0.5) if scale is None else scale
     interpret = (jax.default_backend() == "cpu") if interpret is None \
         else interpret
     q_block = min(q_block, S)
     kv_block = min(kv_block, S)
     assert S % q_block == 0 and S % kv_block == 0
-    q_steps, kv_steps = S // q_block, S // kv_block
+    kv_steps = S // kv_block
 
     q3 = q.reshape(B * H, S, D)
-    grid = (B * H, q_steps, kv_steps)
+    lay = attention_layout(B, H, KH, S, D, q_block, kv_block)
 
     kernel = functools.partial(
         _attn_kernel, scale=scale, causal=causal, q_block=q_block,
@@ -113,19 +146,11 @@ def flash_attention(q, k, v, *, causal: bool = True,
 
     out = pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, q_block, D), lambda bh, qi, ki: (bh, qi, 0)),
-            pl.BlockSpec((1, 1, kv_block, D),
-                         lambda bh, qi, ki, g=group, h=H:
-                         (bh // h, (bh % h) // g, ki, 0)),
-            pl.BlockSpec((1, 1, kv_block, D),
-                         lambda bh, qi, ki, g=group, h=H:
-                         (bh // h, (bh % h) // g, ki, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, q_block, D),
-                               lambda bh, qi, ki: (bh, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, S, D), q.dtype),
+        grid=lay["grid"],
+        in_specs=[pl.BlockSpec(lay[n][0], lay[n][2])
+                  for n in ("q", "k", "v")],
+        out_specs=pl.BlockSpec(lay["o"][0], lay["o"][2]),
+        out_shape=jax.ShapeDtypeStruct(lay["o"][1], q.dtype),
         scratch_shapes=[
             pltpu.VMEM((q_block, 128), jnp.float32),
             pltpu.VMEM((q_block, 128), jnp.float32),

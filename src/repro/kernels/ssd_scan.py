@@ -24,6 +24,35 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def ssd_layout(BH: int, S: int, P: int, N: int, chunk: int) -> dict:
+    """The launch geometry of :func:`ssd_scan`, as data.
+
+    Shared by the ``pallas_call`` below and the static grid verifier
+    (``repro.verify.grid_check``): per operand a ``(block_shape,
+    array_shape, index_map)`` triple over the grid ``(B*H, n_chunks)``.
+    Sequence streams tile over chunks; the per-head scalar rows (a_log,
+    d_skip) re-read their single block every chunk step."""
+    n_chunks = S // chunk
+
+    def seq_map(bh_, ci):
+        return (bh_, ci, 0)
+
+    def head_map(bh_, ci):
+        return (bh_, 0, 0)
+
+    return {
+        "grid": (BH, n_chunks),
+        "x": ((1, chunk, P), (BH, S, P), seq_map),
+        "dt": ((1, chunk, 128), (BH, S, 128), seq_map),
+        "a_log": ((1, 1, 128), (BH, 1, 128), head_map),
+        "b": ((1, chunk, N), (BH, S, N), seq_map),
+        "c": ((1, chunk, N), (BH, S, N), seq_map),
+        "d_skip": ((1, 1, 128), (BH, 1, 128), head_map),
+        "o": ((1, chunk, P), (BH, S, P), seq_map),
+        "scratch_bytes": N * P * 4,        # the carried (N, P) f32 state
+    }
+
+
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, o_ref, h_scr, *,
                 chunk: int):
     ci = pl.program_id(1)
@@ -94,20 +123,14 @@ def ssd_scan(x, dt, a_log, b_mat, c_mat, d_skip, *, chunk: int = 128,
     b_h = jnp.broadcast_to(b_mat[:, None], (B, H, S, N)).reshape(B * H, S, N)
     c_h = jnp.broadcast_to(c_mat[:, None], (B, H, S, N)).reshape(B * H, S, N)
 
-    grid = (B * H, n_chunks)
+    lay = ssd_layout(B * H, S, P, N, chunk)
     out = pl.pallas_call(
         functools.partial(_ssd_kernel, chunk=chunk),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, chunk, P), lambda bh_, ci: (bh_, ci, 0)),
-            pl.BlockSpec((1, chunk, 128), lambda bh_, ci: (bh_, ci, 0)),
-            pl.BlockSpec((1, 1, 128), lambda bh_, ci: (bh_, 0, 0)),
-            pl.BlockSpec((1, chunk, N), lambda bh_, ci: (bh_, ci, 0)),
-            pl.BlockSpec((1, chunk, N), lambda bh_, ci: (bh_, ci, 0)),
-            pl.BlockSpec((1, 1, 128), lambda bh_, ci: (bh_, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, chunk, P), lambda bh_, ci: (bh_, ci, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, S, P), x.dtype),
+        grid=lay["grid"],
+        in_specs=[pl.BlockSpec(lay[n][0], lay[n][2])
+                  for n in ("x", "dt", "a_log", "b", "c", "d_skip")],
+        out_specs=pl.BlockSpec(lay["o"][0], lay["o"][2]),
+        out_shape=jax.ShapeDtypeStruct(lay["o"][1], x.dtype),
         scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
         interpret=interpret,
     )(xh, dth, a_rows, b_h, c_h, d_rows)

@@ -15,7 +15,12 @@ severity-tagged :class:`Finding`\\ s:
    ``repro.core.schedule``, not a call into it);
 4. **codegen** (:mod:`.codegen_check`) — AST analysis of emitted
    JAX/Pallas sources (bounds, aliasing, use-before-def, dead loads,
-   overlap-distance lint).
+   overlap-distance lint);
+5. **grid** (:mod:`.grid_check`, PR 9) — symbolic certification of the
+   launch configuration itself: BlockSpec index maps are evaluated over
+   symbolic grid coordinates (:mod:`repro.analysis.access`) and the
+   resulting footprints proven coverage-complete, write-disjoint,
+   in-bounds (pad region modeled), and inside the exact VMEM budget.
 
 ``SaturatorConfig(verify="cheap"|"full")`` runs 2–4 on every pipeline
 product (``"full"`` also re-validates the active rule set and certifies
@@ -28,8 +33,11 @@ from typing import Optional
 
 from .codegen_check import check_generated, shapes_of
 from .egraph_check import check_egraph
-from .findings import (PASS_CODEGEN, PASS_EGRAPH, PASS_RULES, PASS_SCHEDULE,
-                       SEVERITIES, Finding, VerifyReport)
+from .findings import (PASS_CODEGEN, PASS_EGRAPH, PASS_GRID, PASS_RULES,
+                       PASS_SCHEDULE, SEVERITIES, Finding, VerifyReport)
+from .grid_check import (GridCheckResult, check_grid, check_tile_op,
+                         flash_attention_model, ssd_scan_model,
+                         tile_call_model)
 from .rules_check import RuleRecord, RulesCheckResult, verify_rules
 from .schedule_check import (ScheduleCheckResult, verify_async_plan,
                              verify_schedule)
@@ -39,10 +47,13 @@ VERIFY_LEVELS = ("off", "cheap", "full")
 __all__ = [
     "Finding", "VerifyReport", "SEVERITIES", "VERIFY_LEVELS",
     "PASS_RULES", "PASS_EGRAPH", "PASS_SCHEDULE", "PASS_CODEGEN",
+    "PASS_GRID",
     "verify_rules", "RulesCheckResult", "RuleRecord",
     "check_egraph", "verify_schedule", "ScheduleCheckResult",
     "verify_async_plan", "check_generated", "shapes_of",
-    "verify_saturated", "verify_pallas_kernel",
+    "check_grid", "check_tile_op", "tile_call_model", "GridCheckResult",
+    "flash_attention_model", "ssd_scan_model",
+    "verify_saturated", "verify_pallas_kernel", "verify_tile_op",
 ]
 
 
@@ -128,6 +139,25 @@ def verify_pallas_kernel(pk, ssa) -> VerifyReport:
         rep.sources_checked += 1
     if pk.async_plan and pk.schedule is not None:
         rep.extend(verify_async_plan(ssa, pk.schedule, pk.async_plan))
+    from repro.core.telemetry import telemetry
+    telemetry().record_verify(rep)
+    return rep
+
+
+def verify_tile_op(op, rows: Optional[int] = None,
+                   chip=None) -> VerifyReport:
+    """Certify one :class:`~repro.core.pallasgen.TileOp`'s launch plan
+    (PR 9): the grid pass over exactly the :func:`plan_tile_call` plan
+    the op executes — coverage, write disjointness, bounds with the pad
+    region modeled, exact VMEM fit, and the legacy-heuristic drift
+    comparison. Wired into ``make_tile_op`` for every ``verify`` level
+    above ``"off"``; findings land in the process telemetry like every
+    other pass."""
+    kwargs = {} if chip is None else {"chip": chip}
+    res = check_tile_op(op, rows=rows, **kwargs)
+    rep = VerifyReport()
+    rep.extend(res.findings)
+    rep.grids_checked += res.grids_checked
     from repro.core.telemetry import telemetry
     telemetry().record_verify(rep)
     return rep

@@ -28,6 +28,7 @@ PASS_RULES = "rules"
 PASS_EGRAPH = "egraph"
 PASS_SCHEDULE = "schedule"
 PASS_CODEGEN = "codegen"
+PASS_GRID = "grid"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +64,7 @@ class VerifyReport:
     schedules_certified: int = 0
     egraphs_checked: int = 0
     sources_checked: int = 0
+    grids_checked: int = 0
 
     def add(self, f: Finding) -> None:
         self.findings.append(f)
@@ -76,6 +78,7 @@ class VerifyReport:
         self.schedules_certified += other.schedules_certified
         self.egraphs_checked += other.egraphs_checked
         self.sources_checked += other.sources_checked
+        self.grids_checked += other.grids_checked
 
     def errors(self) -> List[Finding]:
         return [f for f in self.findings if f.severity == "error"]
@@ -108,4 +111,5 @@ class VerifyReport:
             "schedules_certified": self.schedules_certified,
             "egraphs_checked": self.egraphs_checked,
             "sources_checked": self.sources_checked,
+            "grids_checked": self.grids_checked,
         }
