@@ -1,0 +1,283 @@
+"""Chaos sweep gate (PR 10 CI job): every fault site, every tile kernel.
+
+For each kernel the sweep first builds three *un-faulted* baselines —
+one per degradation-ladder level the guarded runtime can land on:
+
+  * **full**  — the configured pipeline (also pre-populates a cache
+    directory, so cache-fault cases start from a valid entry);
+  * **cheap** — the ladder's reduced-search rung
+    (``repro.core.pipeline._cheap_config``);
+  * **ref**   — the reference-interpreter floor
+    (``repro.core.pipeline._reference_kernel``).
+
+Then every fault site from :data:`repro.runtime.chaos.FAULT_SITES` is
+injected (plus an un-faulted control case that must be an exact cache
+hit) and the sweep asserts, per (kernel, site):
+
+  1. **zero unhandled exceptions** — the guarded entry points never
+     raise, whatever the fault;
+  2. the build lands on the **expected ladder level** (cache faults
+     degrade to a cold rebuild, search/verify faults to the cheap rung,
+     codegen faults to the reference floor);
+  3. the generated kernel's outputs are **bit-identical** to the
+     un-faulted baseline *of that level* — degradation changes how hard
+     we searched, never what the kernel computes;
+  4. the op-level outputs are **allclose to the full baseline** (all
+     rungs agree numerically);
+  5. telemetry recorded the chaos fire (and, for cache sites, the
+     rejected/failed entry).
+
+The JSON report contains only hashseed-invariant facts (levels, match
+booleans, deterministic fire counts — no wall times, no raw hashes), so
+CI runs the sweep under two ``PYTHONHASHSEED`` values and ``cmp``s the
+reports byte-for-byte.
+
+Run:  python benchmarks/chaos_sweep.py [--smoke] [--out report.json]
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import pathlib
+import shutil
+import sys
+import tempfile
+import traceback
+from typing import Dict, List, Optional
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.analysis import TILE_SHAPE  # noqa: E402
+from repro.core import (CacheConfig, SaturatorConfig, ScheduleConfig,  # noqa: E402
+                        VerifyConfig, make_tile_op)
+from repro.core.pipeline import (_cheap_config, _reference_kernel,  # noqa: E402
+                                 _saturate_attempt)
+from repro.core.telemetry import telemetry  # noqa: E402
+from repro.kernels.tile_programs import PROGRAMS  # noqa: E402
+from repro.runtime import chaos  # noqa: E402
+from repro.runtime.guard import reset_breakers  # noqa: E402
+
+KERNELS = tuple(sorted(PROGRAMS))
+SMOKE_KERNELS = ("rmsnorm", "adamw", "ssd_gate")
+SCALAR_VAL = 0.5
+_MARK = "CHAOS_SWEEP_JSON:"
+
+# (site, FaultPlan kwargs, expected ladder level, cache-dir setup).
+# Setup: "prepop" = copy of a directory holding the kernel's valid
+# entry; "fresh" = empty writable directory; None = cache disabled.
+CASES = (
+    ("none",           None,                   "hit",   "prepop"),
+    ("cache_read_io",  dict(max_fires=None),   "cold",  "prepop"),
+    ("cache_corrupt",  dict(max_fires=None),   "cold",  "prepop"),
+    ("cache_write_io", dict(max_fires=None),   "cold",  "fresh"),
+    ("rule_raise",     dict(max_fires=1),      "cheap", None),
+    ("egraph_budget",  dict(max_fires=1),      "cheap", None),
+    ("verify_error",   dict(max_fires=1),      "cheap", None),
+    ("slow_stage",     dict(max_fires=1),      "cheap", None),
+    ("exec_fail",      dict(max_fires=None),   "ref",   None),
+)
+CACHE_SITES = ("cache_read_io", "cache_corrupt", "cache_write_io")
+
+
+def _site_config(site: str, cache_dir) -> SaturatorConfig:
+    """The full-path config a given case runs under. ``verify_error``
+    needs the verifier in the loop; ``slow_stage`` needs the cost
+    schedule search (that is where the stall is injected)."""
+    verify = "cheap" if site == "verify_error" else None
+    return SaturatorConfig(
+        mode="accsat", cost_model="tpu_v5e", tpu_rules=True,
+        schedule_cfg=ScheduleConfig(
+            schedule="cost" if site == "slow_stage" else None),
+        cache_cfg=CacheConfig(cache_dir=cache_dir),
+        verify_cfg=VerifyConfig(verify=verify) if verify else None)
+
+
+def _make_arrays(prog) -> Dict[str, np.ndarray]:
+    """Deterministic operand set: seeded uniforms for inputs, zero
+    buffers for outputs (the reference interpreter requires them)."""
+    rng = np.random.default_rng(0)
+    arrays = {}
+    for name, spec in prog.arrays.items():
+        shape = tuple(TILE_SHAPE[i] if d is None else int(d)
+                      for i, d in enumerate(
+                          getattr(spec, "shape", None) or TILE_SHAPE))
+        if spec.role == "out":
+            arrays[name] = np.zeros(shape, np.float32)
+        else:
+            arrays[name] = rng.uniform(
+                0.1, 1.0, size=shape).astype(np.float32)
+    return arrays
+
+
+def _eval_fn(sk, arrays) -> str:
+    """sha256 over the generated kernel's outputs (generated-kernel
+    calling convention: every declared array in order, then scalars)."""
+    args = [jnp.asarray(arrays[n]) for n in sk.kernel.in_arrays] \
+        + [SCALAR_VAL for _ in sk.kernel.scalars]
+    outs = sk.kernel.fn(*args)
+    return hashlib.sha256(
+        b"".join(np.asarray(o).tobytes() for o in outs)).hexdigest()
+
+
+def _eval_apply(op, prog, arrays) -> List[np.ndarray]:
+    """Outputs through the op-level entry (Pallas interpret on CPU, or
+    the degraded jax_ref path when emission/codegen was lost)."""
+    ins = [jnp.asarray(arrays[n]) for n, spec in prog.arrays.items()
+           if spec.role != "out"]
+    scalars = {s: SCALAR_VAL for s in op.sk.kernel.scalars}
+    out = op.apply(*ins, **scalars)
+    outs = out if isinstance(out, tuple) else (out,)
+    return [np.asarray(o) for o in outs]
+
+
+def _build_baselines(name: str, prepop_root: str, arrays):
+    """Un-faulted outputs at each ladder level; the full build also
+    populates ``prepop_root`` with the kernel's cache entry."""
+    prog = PROGRAMS[name]()
+    full_op = make_tile_op(prog, _site_config("none", prepop_root))
+    cheap_sk = _saturate_attempt(
+        prog, _cheap_config(_site_config("none", False)))
+    ref_sk = _reference_kernel(prog, _site_config("none", False))
+    return {
+        "full": _eval_fn(full_op.sk, arrays),
+        # "hit"/"warm"/"cold" all replay/rebuild the full search result
+        "hit": _eval_fn(full_op.sk, arrays),
+        "cold": _eval_fn(full_op.sk, arrays),
+        "cheap": _eval_fn(cheap_sk, arrays),
+        "ref": _eval_fn(ref_sk, arrays),
+    }, _eval_apply(full_op, prog, arrays)
+
+
+def run_case(name: str, site: str, plan_kw: Optional[dict],
+             expected: str, setup: Optional[str], prepop_root: str,
+             fn_baselines: Dict[str, str], apply_baseline,
+             tmp_base: str) -> dict:
+    telemetry().reset()
+    reset_breakers()
+    if setup == "prepop":
+        cache_dir = os.path.join(tmp_base, f"{name}_{site}_cache")
+        shutil.copytree(prepop_root, cache_dir)
+    elif setup == "fresh":
+        cache_dir = tempfile.mkdtemp(
+            prefix=f"{name}_{site}_", dir=tmp_base)
+    else:
+        cache_dir = False
+    prog = PROGRAMS[name]()
+    arrays = _make_arrays(prog)
+    cfg = _site_config(site, cache_dir)
+    plan = chaos.FaultPlan(sites=(site,), **plan_kw) \
+        if plan_kw is not None else None
+
+    with chaos.plan_scope(plan):
+        op = make_tile_op(prog, cfg)
+        fn_hash = _eval_fn(op.sk, arrays)
+        apply_outs = _eval_apply(op, prog, arrays)
+
+    snap = telemetry().snapshot()
+    level = op.sk.ladder_level
+    rec = {
+        "expected": expected,
+        "level": level,
+        "bitwise": fn_hash == fn_baselines[expected],
+        "allclose": all(
+            np.allclose(a, b, rtol=2e-4, atol=1e-6)
+            for a, b in zip(apply_outs, apply_baseline)),
+        "chaos_fires": int(
+            snap["guard"]["chaos_fires"].get(site, 0)),
+        "cache_invalid": int(snap["cache_invalid"]),
+    }
+    ok = (level == expected and rec["bitwise"] and rec["allclose"]
+          and len(apply_outs) == len(apply_baseline))
+    if site != "none" and rec["chaos_fires"] < 1:
+        ok = False
+    if site in CACHE_SITES and rec["cache_invalid"] < 1:
+        ok = False
+    rec["ok"] = ok
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="3-kernel subset (the CI chaos-smoke job)")
+    ap.add_argument("--kernels", default=None,
+                    help="comma-separated kernel subset")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report to this path")
+    args = ap.parse_args()
+
+    # the sweep owns its chaos/cache environment
+    os.environ.pop(chaos.ENV_VAR, None)
+    os.environ.pop("REPRO_SAT_CACHE", None)
+    chaos.clear_plan()
+
+    kernels = (tuple(args.kernels.split(",")) if args.kernels
+               else SMOKE_KERNELS if args.smoke else KERNELS)
+    tmp_base = tempfile.mkdtemp(prefix="repro_chaos_sweep_")
+    report: Dict[str, dict] = {"kernels": list(kernels), "cases": {}}
+    failures: List[str] = []
+
+    for name in kernels:
+        prepop_root = os.path.join(tmp_base, f"{name}_prepop")
+        arrays = _make_arrays(PROGRAMS[name]())
+        telemetry().reset()
+        reset_breakers()
+        try:
+            fn_baselines, apply_baseline = _build_baselines(
+                name, prepop_root, arrays)
+        except Exception:
+            failures.append(f"{name}: baseline build raised:\n"
+                            + traceback.format_exc())
+            continue
+        report["cases"][name] = {}
+        for site, plan_kw, expected, setup in CASES:
+            try:
+                rec = run_case(name, site, plan_kw, expected, setup,
+                               prepop_root, fn_baselines,
+                               apply_baseline, tmp_base)
+            except Exception:
+                rec = {"ok": False, "expected": expected,
+                       "level": "<raised>"}
+                failures.append(f"{name}/{site}: unhandled exception "
+                                f"(the guarded path must never raise):\n"
+                                + traceback.format_exc())
+            report["cases"][name][site] = rec
+            if not rec["ok"]:
+                failures.append(
+                    f"{name}/{site}: expected level "
+                    f"{rec.get('expected')}, got {rec.get('level')} "
+                    f"(bitwise={rec.get('bitwise')}, "
+                    f"allclose={rec.get('allclose')}, "
+                    f"chaos_fires={rec.get('chaos_fires')}, "
+                    f"cache_invalid={rec.get('cache_invalid')})")
+            status = "ok" if rec["ok"] else "FAIL"
+            print(f"  {name:16s} {site:16s} -> {rec.get('level'):6s} "
+                  f"(want {expected:6s}) {status}")
+
+    report["ok"] = not failures
+    payload = json.dumps(report, sort_keys=True, indent=1)
+    if args.out:
+        pathlib.Path(args.out).write_text(payload + "\n")
+    print(_MARK + json.dumps(report, sort_keys=True))
+    shutil.rmtree(tmp_base, ignore_errors=True)
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} chaos-sweep violation(s):",
+              file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"\nOK: {len(kernels)} kernels x {len(CASES)} cases — every "
+          f"fault degraded to the expected rung with bit-identical "
+          f"outputs and no unhandled exceptions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,6 +35,7 @@ additionally validated structurally at graft time (see
 """
 from __future__ import annotations
 
+import errno
 import hashlib
 import json
 import os
@@ -45,6 +46,7 @@ from pathlib import Path
 from typing import Any, Dict, Optional, Tuple
 
 from repro.core.telemetry import telemetry
+from repro.runtime import chaos
 
 from .keys import EXTRACTOR_VERSION, FORMAT_VERSION, CacheKey
 from .serialize import CacheInvalid
@@ -119,10 +121,19 @@ class SaturationCache:
     def _load(self, path: Path, key: CacheKey, *, exact: bool
               ) -> Dict[str, Any]:
         try:
+            # chaos site: a failing cache volume (EIO) exercises exactly
+            # this handler — the production degrade-to-miss path
+            chaos.maybe_raise_os("cache_read_io", errno.EIO,
+                                 f"read {path.name}")
             with open(path, encoding="utf-8") as f:
                 doc = json.load(f)
         except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
             raise CacheInvalid(f"unreadable entry {path.name}: {e}") from e
+        if chaos.chaos_point("cache_corrupt"):
+            # tamper a sealed field post-parse: the digest check below
+            # must reject it (corruption that stays valid JSON)
+            doc = dict(doc)
+            doc["dag_cost"] = float(doc.get("dag_cost") or 0.0) + 1.0
         if not isinstance(doc, dict):
             raise CacheInvalid(f"entry {path.name} is not an object")
         if doc.get("format") != FORMAT_VERSION:
@@ -183,14 +194,27 @@ class SaturationCache:
             entry = dict(entry)
             entry["digest"] = entry_digest(entry)
             path.parent.mkdir(parents=True, exist_ok=True)
+            # chaos site: ENOSPC from the atomic-write path exercises
+            # the cache-disabled-with-telemetry degrade below
+            chaos.maybe_raise_os("cache_write_io", errno.ENOSPC,
+                                 f"write {path.name}")
             with open(tmp, "w", encoding="utf-8") as f:
                 json.dump(entry, f, sort_keys=True, separators=(",", ":"))
             os.replace(tmp, path)   # atomic: readers see old or new, whole
-        except (OSError, TypeError, ValueError):
+        except (OSError, TypeError, ValueError) as e:
             try:
                 tmp.unlink(missing_ok=True)
             except OSError:
                 pass
+            if isinstance(e, OSError):
+                # ENOSPC / EIO / read-only fs: a filesystem that cannot
+                # take writes won't heal mid-process — disable this
+                # cache instance (matching the untrusted-root behavior)
+                # instead of paying a failed write per build, and say so
+                telemetry().record_invalid(
+                    key.kernel, f"cache write failed, cache disabled "
+                    f"for this process: {e}")
+                self._usable = False
             return False
         telemetry().record_store(key.kernel)
         return True

@@ -37,6 +37,8 @@ import dataclasses
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.runtime.guard import guard_tick
+
 from .egraph import EGraph
 from .ir import ENode
 
@@ -309,6 +311,10 @@ def beam_search(eg: EGraph, cm, seeds: Sequence[Dict[int, ENode]],
     st.seed_cost = st.best_cost = best_cost
 
     def out_of_budget() -> bool:
+        # guard hook: one deterministic tick per budget check, so a
+        # runaway extraction trips the ambient SaturationGuard's
+        # eval_budget even if max_expansions is misconfigured
+        guard_tick("beam")
         if st.expanded >= max_expansions:
             st.hit_expansion_cap = True
             return True

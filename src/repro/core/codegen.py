@@ -32,6 +32,8 @@ import textwrap
 import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple, Union
 
+from repro.runtime import chaos
+
 from .egraph import EGraph
 from .extract import ExtractionResult
 from .ir import ENode
@@ -547,6 +549,8 @@ class JaxCodeGenerator:
                f"{body}\n"
                f"    return ({', '.join(rets)}{',' if len(rets) == 1 else ''})\n")
         glb: Dict[str, Any] = {"_calls": self.extra_fns}
+        chaos.maybe_raise("exec_fail", self.ssa.prog.name,
+                          "generated JAX source")
         exec(compile(src, f"<saturated:{self.fn_name}>", "exec"), glb)
         return GeneratedKernel(
             name=self.fn_name, source=src, fn=glb[self.fn_name],

@@ -11,6 +11,7 @@ import time
 from typing import Any, Dict, Iterable, List, Optional, Set, Tuple
 
 from repro.analysis.opstats import ArrayInfo
+from repro.runtime.guard import guard_tick
 
 from .ir import ENode, try_const_eval
 
@@ -227,6 +228,11 @@ class EGraph:
 
     def rebuild(self) -> None:
         """Restore congruence: re-canonicalize parents of merged classes."""
+        # guard hook (repro.runtime.guard): the node/class ceilings are
+        # enforced here too — rebuild is where congruence closure can
+        # blow a graph up past what run_rules' per-iteration check saw
+        guard_tick("egraph", nodes=self.num_nodes(),
+                   classes=self.num_classes())
         while self.pending:
             todo, self.pending = self.pending, []
             seen_roots = set()

@@ -45,6 +45,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
 
+from repro.runtime import chaos
+
 from .codegen import JaxCodeGenerator, GenStats, _PRELUDE, _sanitize
 from .dsl import KernelProgram
 from .extract import ExtractionResult
@@ -213,6 +215,8 @@ class SyncPallasGenerator(JaxCodeGenerator):
         src = (f"{self._prelude()}\n"
                f"def {self.fn_name}_body({sig}):\n{body}\n")
         glb: Dict[str, Any] = {}
+        chaos.maybe_raise("exec_fail", prog.name,
+                          "generated Pallas source")
         exec(compile(src, f"<pallas:{self.fn_name}>", "exec"), glb)
         return self._finalize_kernel(
             src, glb[f"{self.fn_name}_body"], in_arrays, out_arrays,
@@ -415,9 +419,13 @@ class PipelinedPallasGenerator(SyncPallasGenerator):
 
 @dataclasses.dataclass
 class TileOp:
-    """Jitted op wrapping a saturated Pallas kernel over a row grid."""
+    """Jitted op wrapping a saturated Pallas kernel over a row grid.
+
+    ``pk=None`` marks a degraded op (Pallas emission failed under the
+    guarded runtime): ``apply`` then delegates to ``jax_ref`` — the
+    kernel still runs, one ladder rung down (see docs/robustness.md)."""
     name: str
-    pk: PallasKernel
+    pk: Optional[PallasKernel]
     jax_ref: Callable          # pure-jnp oracle built from the same program
     row_block: int
     source: str
@@ -430,6 +438,8 @@ class TileOp:
         return self.apply(*arrays, interpret=interpret, **scalars)
 
     def apply(self, *arrays, interpret: Optional[bool] = None, **scalars):
+        if self.pk is None:
+            return self.jax_ref(*arrays, **scalars)
         interpret = _on_cpu() if interpret is None else interpret
         return _apply_tile_op(self, arrays, tuple(sorted(scalars.items())),
                               interpret)
@@ -619,24 +629,38 @@ def make_tile_op(prog: KernelProgram,
     async copies (with a bit-identical interpret fallback)."""
     cfg = config or SaturatorConfig(mode="accsat", cost_model="tpu_v5e")
     sk = saturate_program(prog, cfg)
+    # emission follows the configuration that actually *built* sk: a
+    # ladder-degraded build (repro.runtime.guard) carries its cheap
+    # config in sk.config, and re-running the full schedule search /
+    # pipelined emitter here would re-hit whatever failed
+    ecfg = sk.config
     from .emit import get_emitter
-    emitter = get_emitter(cfg.emitter or "pallas")
+    emitter = get_emitter(ecfg.emitter or "pallas")
     if emitter.info.target != "pallas":
         raise ValueError(f"make_tile_op needs a pallas emitter, got "
                          f"{emitter.info.name!r}")
-    # reuse the pipeline's ScheduleResult when it computed one (cost
-    # mode, or a cache-hit replay): the schedule depends only on the
-    # choice + cost model, not the emitter, so this skips a second
-    # identical search and keeps the Pallas emission aligned with the
-    # cached statement order
-    pgen = emitter.generator_cls(
-        sk.ssa, sk.extraction, bulk=cfg.use_bulk,
-        reuse_temps=cfg.use_cse,
-        schedule=sk.kernel.schedule
-        if sk.kernel.schedule is not None
-        else cfg.schedule,
-        sched_cost_model=cfg.make_schedule_cost_model(prog))
-    pk = pgen.generate_pallas()
+    pk = None
+    if sk.ladder_level != "ref":
+        # reuse the pipeline's ScheduleResult when it computed one (cost
+        # mode, or a cache-hit replay): the schedule depends only on the
+        # choice + cost model, not the emitter, so this skips a second
+        # identical search and keeps the Pallas emission aligned with
+        # the cached statement order
+        try:
+            pgen = emitter.generator_cls(
+                sk.ssa, sk.extraction, bulk=ecfg.use_bulk,
+                reuse_temps=ecfg.use_cse,
+                schedule=sk.kernel.schedule
+                if sk.kernel.schedule is not None
+                else ecfg.schedule,
+                sched_cost_model=ecfg.make_schedule_cost_model(prog))
+            pk = pgen.generate_pallas()
+        except Exception as e:   # ladder contract: emission never fatal
+            from repro.runtime.guard import classify_failure
+            from .telemetry import telemetry
+            telemetry().record_degradation(
+                prog.name, "jax", classify_failure(e, "pallas_emit"))
+            pk = None
 
     jax_fn = sk.kernel.fn
     in_names = sk.kernel.in_arrays
@@ -656,6 +680,14 @@ def make_tile_op(prog: KernelProgram,
         full_args += [scalars[s] for s in scalar_names]
         out = jax_fn(*full_args)
         return out[0] if len(out) == 1 else out
+
+    if pk is None:
+        # degraded op: no Pallas kernel — apply() delegates to jax_ref
+        # (the saturated JAX kernel, or the reference interpreter when
+        # the ladder bottomed out at "ref")
+        return TileOp(name=prog.name, pk=None, jax_ref=jax_ref,
+                      row_block=row_block or 8,
+                      source=sk.kernel.source, sk=sk)
 
     n_tiles = len(pk.in_arrays) + len(pk.out_arrays) + 2
     # autosize from the *declared* operand geometry: the feature width

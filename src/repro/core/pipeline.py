@@ -24,8 +24,10 @@ import warnings
 from typing import Any, Callable, Dict, Optional
 
 from repro.analysis import RooflineCostModel
+from repro.runtime import chaos
+from repro.runtime.guard import GuardConfig, breaker_for, run_ladder
 
-from .codegen import JaxCodeGenerator, GeneratedKernel
+from .codegen import JaxCodeGenerator, GeneratedKernel, GenStats
 from .cost import CostModel, TPUCostModel
 from .dsl import KernelProgram
 from .egraph import EGraph
@@ -175,6 +177,12 @@ class SaturatorConfig:
         default_factory=ScheduleConfig)
     cache_cfg: CacheConfig = dataclasses.field(default_factory=CacheConfig)
     verify_cfg: VerifyConfig = dataclasses.field(default_factory=VerifyConfig)
+    # guarded-runtime policy (repro.runtime.guard, PR 10): hard ceilings,
+    # degradation-ladder/breaker knobs, optional chaos plan. Deliberately
+    # outside the cache fingerprint (keys.py lists components explicitly)
+    # and outside the legacy flat-kwarg shim (like "emitter", it is
+    # post-split — pass the group).
+    guard_cfg: GuardConfig = dataclasses.field(default_factory=GuardConfig)
 
     def __init__(self, mode: str = "accsat", cost_model: str = "roofline",
                  extended_rules: bool = False, tpu_rules: bool = False,
@@ -182,6 +190,7 @@ class SaturatorConfig:
                  schedule_cfg: Optional[ScheduleConfig] = None,
                  cache_cfg: Optional[CacheConfig] = None,
                  verify_cfg: Optional[VerifyConfig] = None,
+                 guard_cfg: Optional[GuardConfig] = None,
                  emitter: Any = _UNSET, **legacy: Any):
         self.mode = mode
         self.cost_model = cost_model
@@ -213,6 +222,7 @@ class SaturatorConfig:
         self.schedule_cfg = groups["schedule_cfg"]
         self.cache_cfg = groups["cache_cfg"]
         self.verify_cfg = groups["verify_cfg"]
+        self.guard_cfg = guard_cfg or GuardConfig()
         self.__post_init__()
 
     def __post_init__(self):
@@ -421,6 +431,9 @@ class SaturatedKernel:
     cache_status: str = "off"
     # static-verification report (repro.verify) when config.verify != "off"
     verify_report: Optional[Any] = None
+    # degradation-ladder rung this build landed on (repro.runtime.guard):
+    # "hit" | "warm" | "cold" | "cheap" | "ref"
+    ladder_level: str = "cold"
 
     @property
     def fn(self) -> Callable:
@@ -464,6 +477,7 @@ class SaturatedKernel:
                 self.kernel.schedule.predicted_ns
                 if self.kernel.schedule is not None else None),
             "cache": self.cache_status,
+            "ladder": self.ladder_level,
             "sat_iterations": self.saturation.iterations
             if self.saturation else 0,
             "sat_nodes": self.saturation.n_nodes if self.saturation else 0,
@@ -529,6 +543,8 @@ def _maybe_verify(sk: SaturatedKernel) -> SaturatedKernel:
     """Run the static verifier when configured ("off" = no work at all,
     keeping the cache warm-hit path overhead-free)."""
     if sk.config.verify != "off":
+        chaos.maybe_raise("verify_error", sk.ssa.prog.name
+                          if sk.ssa is not None else None)
         from repro.verify import verify_saturated
         sk.verify_report = verify_saturated(sk)
     return sk
@@ -625,11 +641,11 @@ def _store_entry(cache, key, cfg: SaturatorConfig, prog,
         telemetry().record_invalid(prog.name, f"store failed: {e}")
 
 
-def saturate_program(prog: KernelProgram,
-                     config: Optional[SaturatorConfig] = None,
-                     extra_fns: Optional[Dict[str, Callable]] = None
-                     ) -> SaturatedKernel:
-    cfg = config or SaturatorConfig()
+def _saturate_attempt(prog: KernelProgram, cfg: SaturatorConfig,
+                      extra_fns: Optional[Dict[str, Callable]] = None
+                      ) -> SaturatedKernel:
+    """One un-guarded build of the configured pipeline (the pre-PR-10
+    ``saturate_program`` body). May raise; the ladder wrapper catches."""
     cache = _resolve_cache(cfg)
     t_begin = time.perf_counter()
     ssa = build_ssa(prog)
@@ -743,6 +759,112 @@ def saturate_program(prog: KernelProgram,
                                  time.perf_counter() - t_begin)
         _store_entry(cache, key, cfg, prog, sk)
     return _maybe_verify(sk)
+
+
+def _cheap_config(cfg: SaturatorConfig) -> SaturatorConfig:
+    """The ladder's "cheap" rung: beam width 1 with tiny deterministic
+    budgets, the mode's legacy emission with *no* schedule search
+    (``schedule=None`` — the effective bulk order for accsat), verify
+    off, cache off, default emitter. Same mode/rules, so semantics are
+    unchanged; only search effort and optional machinery drop away."""
+    return SaturatorConfig(
+        mode=cfg.mode, cost_model=cfg.cost_model,
+        extended_rules=cfg.extended_rules, tpu_rules=cfg.tpu_rules,
+        search_cfg=dataclasses.replace(
+            cfg.search_cfg, search="beam", beam_width=1,
+            beam_coordinated=False, local_search=False,
+            beam_expansions=min(cfg.beam_expansions, 2_000),
+            hillclimb_evals=min(cfg.hillclimb_evals, 2_000)),
+        schedule_cfg=ScheduleConfig(),
+        cache_cfg=CacheConfig(cache_dir=False),
+        verify_cfg=VerifyConfig(verify="off"),
+        guard_cfg=dataclasses.replace(cfg.guard_cfg, ladder=False))
+
+
+def _reference_kernel(prog: KernelProgram, cfg: SaturatorConfig,
+                      extra_fns: Optional[Dict[str, Callable]] = None
+                      ) -> SaturatedKernel:
+    """The ladder's floor: a SaturatedKernel whose callable is the
+    reference interpreter (``core/reference.py``) wrapped in the
+    generated-kernel calling convention (all declared arrays in order,
+    then scalars; returns the out/inout tuple, cast to each out
+    buffer's dtype). Eager numpy — not jit-traceable; inside traced
+    code the kernels layer falls back to the jnp oracles in
+    ``kernels/ref.py`` instead (see ``repro.kernels.ops``)."""
+    import numpy as np
+
+    from .reference import run_reference
+    t0 = time.perf_counter()
+    names = list(prog.arrays)
+    scalar_names = list(prog.scalars)
+    out_names = [a.name for a in prog.arrays.values()
+                 if a.role in ("out", "inout")]
+    calls = dict(extra_fns or {})
+
+    def ref_fn(*args):
+        arrays = {n: np.asarray(a) for n, a in zip(names, args)}
+        inputs: Dict[str, Any] = dict(arrays)
+        inputs.update(zip(scalar_names, args[len(names):]))
+        out = run_reference(prog, inputs, calls=calls)
+        return tuple(np.asarray(out[n], dtype=arrays[n].dtype)
+                     for n in out_names)
+
+    gen = GeneratedKernel(
+        name=prog.name, source=f"# reference-interpreter fallback for "
+        f"{prog.name!r} (degradation-ladder floor)\n",
+        fn=ref_fn, in_arrays=names, scalars=scalar_names,
+        out_arrays=out_names, stats=GenStats(), bulk=False,
+        schedule_mode="source", schedule=None)
+    try:
+        ssa = build_ssa(prog)
+    except Exception:   # even SSA may be the failing stage
+        ssa = None
+    extraction = ExtractionResult(choice={}, roots=(), dag_cost=0.0,
+                                  tree_cost=0.0, search="reference")
+    return SaturatedKernel(
+        kernel=gen, ssa=ssa, extraction=extraction, saturation=None,
+        config=cfg, codegen_wall_s=time.perf_counter() - t0,
+        cache_status="off", ladder_level="ref")
+
+
+def _breaker_key(prog: KernelProgram, cfg: SaturatorConfig):
+    """Cheap stable key: same kernel under a meaningfully different
+    configuration fails (and cools down) independently."""
+    return (prog.name, cfg.mode, cfg.cost_model, cfg.schedule_mode,
+            cfg.emitter, cfg.tpu_rules, cfg.extended_rules)
+
+
+def saturate_program(prog: KernelProgram,
+                     config: Optional[SaturatorConfig] = None,
+                     extra_fns: Optional[Dict[str, Callable]] = None
+                     ) -> SaturatedKernel:
+    """Guarded front door: the full configured build under a
+    :class:`repro.runtime.guard.SaturationGuard`, degrading down the
+    ladder (hit/warm/cold -> cheap -> ref) instead of raising, with a
+    per-(kernel, config) circuit breaker skipping the full path after
+    repeated failures. ``guard_cfg.ladder=False`` restores the raw
+    single-attempt behavior (the ladder uses it internally)."""
+    cfg = config or SaturatorConfig()
+    gcfg = cfg.guard_cfg
+    with chaos.plan_scope(gcfg.chaos):
+        if not gcfg.ladder:
+            return _saturate_attempt(prog, cfg, extra_fns)
+        breaker = breaker_for(_breaker_key(prog, cfg),
+                              threshold=gcfg.breaker_threshold,
+                              cooldown=gcfg.breaker_cooldown)
+        level, sk = run_ladder(
+            prog.name,
+            [("full", lambda: _saturate_attempt(prog, cfg, extra_fns)),
+             ("cheap", lambda: _saturate_attempt(
+                 prog, _cheap_config(cfg), extra_fns)),
+             ("ref", lambda: _reference_kernel(prog, cfg, extra_fns))],
+            cfg=gcfg, breaker=breaker)
+        if level == "full":
+            level = sk.cache_status if sk.cache_status in ("hit", "warm") \
+                else "cold"
+        sk.ladder_level = level
+        telemetry().record_ladder(prog.name, level)
+        return sk
 
 
 def saturate_all_modes(prog: KernelProgram, base: Optional[SaturatorConfig]

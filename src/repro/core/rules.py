@@ -22,6 +22,9 @@ import dataclasses
 import time
 from typing import Callable, List, Optional, Tuple
 
+from repro.runtime import chaos
+from repro.runtime.guard import BudgetExceeded, guard_tick
+
 from .egraph import EGraph, P, V, Pattern, PatVar
 
 
@@ -115,6 +118,15 @@ def run_rules(eg: EGraph, rules: List[Rule], *,
     t0 = time.perf_counter()
     for it in range(iter_limit):
         rep.iterations = it + 1
+        # guard hook: one tick per saturation iteration, carrying the
+        # graph size so the node/class ceilings (safety nets above the
+        # paper's node_limit) are enforced even if a rule loops
+        guard_tick("saturation", nodes=eg.num_nodes(),
+                   classes=eg.num_classes())
+        chaos.maybe_raise("rule_raise", detail="rule application")
+        if chaos.chaos_point("egraph_budget"):
+            raise BudgetExceeded("egraph_budget",
+                                 "injected e-graph exhaustion")
         matches: List[Tuple[Rule, int, dict]] = []
         for rule in rules:
             found = eg.ematch(rule.lhs)

@@ -43,6 +43,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
+from repro.runtime import chaos
+from repro.runtime.guard import BudgetExceeded, guard_tick
+
 from repro.analysis.latency import LatencyModel, ScheduleEvent
 from repro.analysis.opstats import _PASSES, op_pass_class
 
@@ -624,10 +627,17 @@ def _cost_order(lat: LatencyModel, units: List[SchedUnit],
     any seed."""
     by_uid = {u.uid: u for u in units}
     scored = 0
+    # chaos site: a stalled cost search surfaces as the deadline trip
+    # the guard's wall-clock safety net would report, deterministically
+    if chaos.chaos_point("slow_stage"):
+        raise BudgetExceeded("deadline", "injected slow-stage stall in "
+                             "the cost schedule search")
 
     def objective(order: List[int]) -> float:
         nonlocal scored
         scored += 1
+        # guard hook: one deterministic tick per scored order
+        guard_tick("schedule")
         return _region_ns(lat, units, order, vmem_budget)["latency_ns"]
 
     dependents = {u.uid: {v.uid for v in units if u.uid in v.deps}

@@ -47,6 +47,22 @@ class SaturationTelemetry:
     rules_checked: int = 0
     schedules_certified: int = 0
     grids_checked: int = 0
+    # guarded-runtime counters (repro.runtime.guard / .chaos, PR 10)
+    ladder_levels: Dict[str, int] = dataclasses.field(
+        default_factory=dict)   # final ladder level -> build count
+    degradations: Dict[str, int] = dataclasses.field(
+        default_factory=dict)   # degraded level (cheap/ref/...) -> count
+    degradation_triggers: Dict[str, int] = dataclasses.field(
+        default_factory=dict)   # trigger label -> count
+    guard_failures: Dict[str, int] = dataclasses.field(
+        default_factory=dict)   # "level:trigger" -> failed-attempt count
+    breaker_events: Dict[str, int] = dataclasses.field(
+        default_factory=dict)   # open/close/half_open/skip -> count
+    chaos_fires: Dict[str, int] = dataclasses.field(
+        default_factory=dict)   # injection site -> fire count
+    runtime_fallbacks: Dict[str, int] = dataclasses.field(
+        default_factory=dict)   # kernel -> ops-layer ref-fallback count
+    elastic_recoveries: int = 0
     events: Deque[Dict[str, Any]] = dataclasses.field(
         default_factory=lambda: deque(maxlen=EVENT_LIMIT))
 
@@ -105,6 +121,59 @@ class SaturationTelemetry:
                                     "errors": [str(f) for f
                                                in report.errors()][:8]})
 
+    # -- guarded-runtime events (PR 10) -------------------------------------
+    def record_ladder(self, kernel: str, level: str):
+        """Final degradation-ladder level of one saturate call."""
+        with self._lock:
+            self.ladder_levels[level] = self.ladder_levels.get(level, 0) + 1
+
+    def record_degradation(self, kernel: str, level: str, trigger: str):
+        """One build landed below the full path: at ``level``, pushed
+        there by ``trigger`` (the first failure's classified label)."""
+        with self._lock:
+            self.degradations[level] = self.degradations.get(level, 0) + 1
+            self.degradation_triggers[trigger] = \
+                self.degradation_triggers.get(trigger, 0) + 1
+            self.events.append({"kind": "degradation", "kernel": kernel,
+                                "level": level, "trigger": trigger})
+
+    def record_guard_failure(self, kernel: str, level: str, trigger: str):
+        with self._lock:
+            k = f"{level}:{trigger}"
+            self.guard_failures[k] = self.guard_failures.get(k, 0) + 1
+            self.events.append({"kind": "guard_failure", "kernel": kernel,
+                                "level": level, "trigger": trigger})
+
+    def record_breaker(self, key: Any, event: str):
+        """event in {"open", "close", "half_open", "skip"}."""
+        with self._lock:
+            self.breaker_events[event] = \
+                self.breaker_events.get(event, 0) + 1
+            self.events.append({"kind": "breaker", "key": str(key),
+                                "event": event})
+
+    def record_chaos(self, site: str, kernel: Any = None):
+        with self._lock:
+            self.chaos_fires[site] = self.chaos_fires.get(site, 0) + 1
+            self.events.append({"kind": "chaos", "site": site,
+                                "kernel": kernel})
+
+    def record_runtime_fallback(self, kernel: str, reason: str):
+        """ops-layer safety net: an op call fell back to its named
+        reference oracle at apply time."""
+        with self._lock:
+            self.runtime_fallbacks[kernel] = \
+                self.runtime_fallbacks.get(kernel, 0) + 1
+            self.events.append({"kind": "runtime_fallback",
+                                "kernel": kernel, "reason": reason})
+
+    def record_recovery(self, step: int, kind: str, shards: Any = None):
+        """ft.ElasticTrainer completed a recovery (state preserved)."""
+        with self._lock:
+            self.elastic_recoveries += 1
+            self.events.append({"kind": "elastic_recovery", "step": step,
+                                "event": kind, "shards": shards})
+
     # -- reporting ----------------------------------------------------------
     def snapshot(self) -> Dict[str, Any]:
         with self._lock:
@@ -132,6 +201,22 @@ class SaturationTelemetry:
                     "schedules_certified": self.schedules_certified,
                     "grids_checked": self.grids_checked,
                 },
+                "guard": {
+                    "ladder_levels": dict(sorted(
+                        self.ladder_levels.items())),
+                    "degradations": dict(sorted(
+                        self.degradations.items())),
+                    "degradation_triggers": dict(sorted(
+                        self.degradation_triggers.items())),
+                    "guard_failures": dict(sorted(
+                        self.guard_failures.items())),
+                    "breaker_events": dict(sorted(
+                        self.breaker_events.items())),
+                    "chaos_fires": dict(sorted(self.chaos_fires.items())),
+                    "runtime_fallbacks": dict(sorted(
+                        self.runtime_fallbacks.items())),
+                    "elastic_recoveries": self.elastic_recoveries,
+                },
             }
 
     def reset(self):
@@ -145,6 +230,14 @@ class SaturationTelemetry:
             self.verify_findings_by_pass.clear()
             self.rules_checked = self.schedules_certified = 0
             self.grids_checked = 0
+            self.ladder_levels.clear()
+            self.degradations.clear()
+            self.degradation_triggers.clear()
+            self.guard_failures.clear()
+            self.breaker_events.clear()
+            self.chaos_fires.clear()
+            self.runtime_fallbacks.clear()
+            self.elastic_recoveries = 0
             self.events.clear()
 
 

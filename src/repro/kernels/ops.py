@@ -13,10 +13,13 @@ globally (tests sweep all three).
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.telemetry import telemetry
+from repro.runtime.guard import breaker_for
 
 from . import ref as _ref
 from .flash_attention import decode_attention, flash_attention
@@ -26,6 +29,20 @@ from .tile_programs import get_tile_op
 _IMPL: Optional[str] = None  # None = auto
 _SAT_CACHE: Optional[str] = None  # persistent saturation cache directory
 _SAT_VERIFY: Optional[str] = None  # static-verification level for builds
+
+# runtime degradation floor (PR 10): the named jnp oracle each tile op
+# falls back to when building or applying the optimized op fails — the
+# serve/train hot paths must never see a saturator exception. jnp
+# oracles are jit-traceable, so the fallback also works mid-trace
+# (where the pipeline's numpy reference interpreter cannot run).
+_REF_FNS: dict = {
+    "rmsnorm": _ref.rmsnorm_ref, "rmsnorm_gated": _ref.rmsnorm_gated_ref,
+    "layernorm": _ref.layernorm_ref, "swiglu": _ref.swiglu_ref,
+    "gelu": _ref.gelu_ref, "rotary": _ref.rotary_ref,
+    "residual_scale": _ref.residual_scale_ref,
+    "softmax": _ref.softmax_ref, "moe_router": _ref.softmax_ref,
+    "adamw": _ref.adamw_ref, "ssd_gate": _ref.ssd_gate_ref,
+}
 
 
 def set_impl(impl: Optional[str]):
@@ -74,14 +91,37 @@ def current_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "jnp"
 
 
+def _guarded(name: str, optimized: Callable, reference: Callable):
+    """Run the optimized path under the runtime floor: any failure
+    (building the tile op, tracing, or applying it) falls back to the
+    named jnp oracle instead of raising to the caller. A per-kernel
+    circuit breaker skips the optimized attempt entirely after repeated
+    failures, so a pathological kernel doesn't pay the failure cost on
+    every request."""
+    br = breaker_for(("apply", name))
+    if br.admit() is not None:
+        telemetry().record_runtime_fallback(name, "breaker_open")
+        return reference()
+    try:
+        out = optimized()
+    except Exception as e:  # ladder floor: degrade, never raise
+        br.record_failure(fallback_level="ref")
+        telemetry().record_runtime_fallback(name, type(e).__name__)
+        return reference()
+    br.record_success()
+    return out
+
+
 def _tile(name: str, *arrays, **scalars):
     impl = current_impl()
+    ref_fn = _REF_FNS[name]
     if impl == "ref":
-        return getattr(_ref, f"{name}_ref")(*arrays, **scalars)
-    op = _op(name)
+        return ref_fn(*arrays, **scalars)
     if impl == "pallas":
-        return op.apply(*arrays, **scalars)
-    return op.jax_ref(*arrays, **scalars)
+        return _guarded(name, lambda: _op(name).apply(*arrays, **scalars),
+                        lambda: ref_fn(*arrays, **scalars))
+    return _guarded(name, lambda: _op(name).jax_ref(*arrays, **scalars),
+                    lambda: ref_fn(*arrays, **scalars))
 
 
 # -- saturated tile ops ---------------------------------------------------------
@@ -102,10 +142,7 @@ def swiglu(a, b):
 
 
 def gelu(a):
-    if current_impl() == "ref":
-        return _ref.gelu_ref(a)
-    op = _op("gelu")
-    return op.apply(a) if current_impl() == "pallas" else op.jax_ref(a)
+    return _tile("gelu", a)
 
 
 def rotary(q, cos, sin):
@@ -113,12 +150,16 @@ def rotary(q, cos, sin):
     impl = current_impl()
     if impl == "ref":
         return _ref.rotary_ref(q, cos, sin)
-    op = _op("rotary")
-    cosb = jnp.broadcast_to(cos, q.shape)
-    sinb = jnp.broadcast_to(sin, q.shape)
-    if impl == "pallas":
-        return op.apply(q, cosb, sinb)
-    return op.jax_ref(q, cosb, sinb)
+
+    def _opt():
+        op = _op("rotary")
+        cosb = jnp.broadcast_to(cos, q.shape)
+        sinb = jnp.broadcast_to(sin, q.shape)
+        if impl == "pallas":
+            return op.apply(q, cosb, sinb)
+        return op.jax_ref(q, cosb, sinb)
+
+    return _guarded("rotary", _opt, lambda: _ref.rotary_ref(q, cos, sin))
 
 
 def residual_scale(x, y, alpha=1.0):
@@ -130,27 +171,14 @@ def softmax(x):
 
 
 def moe_router_probs(logits):
-    impl = current_impl()
-    if impl == "ref":
-        return _ref.softmax_ref(logits)
-    op = _op("moe_router")
-    return op.apply(logits) if impl == "pallas" else op.jax_ref(logits)
+    return _tile("moe_router", logits)
 
 
 def adamw_update(param, grad, m, v, *, lr, b1, b2, eps, wd,
                  inv_bc1, inv_bc2):
     """Returns (m_new, v_new, param_new) — saturated fused update."""
-    impl = current_impl()
-    if impl == "ref":
-        return _ref.adamw_ref(param, grad, m, v, lr=lr, b1=b1, b2=b2,
-                              eps=eps, wd=wd, inv_bc1=inv_bc1,
-                              inv_bc2=inv_bc2)
-    op = _op("adamw")
-    kw = dict(lr=lr, b1=b1, b2=b2, eps=eps, wd=wd,
-              inv_bc1=inv_bc1, inv_bc2=inv_bc2)
-    if impl == "pallas":
-        return op.apply(param, grad, m, v, **kw)
-    return op.jax_ref(param, grad, m, v, **kw)
+    return _tile("adamw", param, grad, m, v, lr=lr, b1=b1, b2=b2,
+                 eps=eps, wd=wd, inv_bc1=inv_bc1, inv_bc2=inv_bc2)
 
 
 def ssd_gate(dt_raw, a_log, bias=0.0):
@@ -158,11 +186,16 @@ def ssd_gate(dt_raw, a_log, bias=0.0):
     impl = current_impl()
     if impl == "ref":
         return _ref.ssd_gate_ref(dt_raw, a_log, bias=bias)
-    op = _op("ssd_gate")
-    a_b = jnp.broadcast_to(a_log, dt_raw.shape)
-    if impl == "pallas":
-        return op.apply(dt_raw, a_b, bias=bias)
-    return op.jax_ref(dt_raw, a_b, bias=bias)
+
+    def _opt():
+        op = _op("ssd_gate")
+        a_b = jnp.broadcast_to(a_log, dt_raw.shape)
+        if impl == "pallas":
+            return op.apply(dt_raw, a_b, bias=bias)
+        return op.jax_ref(dt_raw, a_b, bias=bias)
+
+    return _guarded("ssd_gate", _opt,
+                    lambda: _ref.ssd_gate_ref(dt_raw, a_log, bias=bias))
 
 
 # -- structured kernels -----------------------------------------------------------

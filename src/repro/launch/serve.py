@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import threading
 import time
 from typing import Dict, List, Optional
 
@@ -65,7 +66,15 @@ class Server:
         self.max_batch = max_batch
         self.max_seq = max_seq
         self._decode = jax.jit(self.model.decode_step)
+        # metrics are mutated from every serving thread — concurrent
+        # generate() calls are supported, so counter updates take this
+        # lock (prevents lost increments / torn read-modify-write)
+        self._metrics_lock = threading.Lock()
         self.metrics = {"prefills": 0, "decode_ticks": 0, "tokens": 0}
+
+    def _bump(self, key: str, n: int = 1):
+        with self._metrics_lock:
+            self.metrics[key] += n
 
     def _prefill_batch(self, prompts: np.ndarray):
         tokens = jnp.asarray(prompts, jnp.int32)
@@ -75,7 +84,7 @@ class Server:
             logits, cache = self.model.prefill(self.params, tokens, frames)
         else:
             logits, cache = self.model.prefill(self.params, tokens)
-        self.metrics["prefills"] += 1
+        self._bump("prefills")
         return logits, cache
 
     def generate(self, requests: List[Request]) -> Dict[int, List[int]]:
@@ -97,14 +106,20 @@ class Server:
                         r.out.append(int(tok[i, 0]))
                 logits, cache = self._decode(self.params, cache, tok)
                 tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
-                self.metrics["decode_ticks"] += 1
-                self.metrics["tokens"] += len(batch)
+                self._bump("decode_ticks")
+                self._bump("tokens", len(batch))
             for i, r in enumerate(batch):
                 if len(r.out) < r.max_new:
                     r.out.append(int(tok[i, 0]))
                 r.done = True
                 results[r.rid] = r.out
-        self.metrics["saturation"] = telemetry().snapshot()
+        snap = telemetry().snapshot()
+        with self._metrics_lock:
+            # snapshot() is already internally consistent; the lock only
+            # orders the dict swap against concurrent counter bumps.
+            # snap["guard"] carries the PR-10 robustness counters
+            # (ladder levels, degradations, breaker events, chaos fires).
+            self.metrics["saturation"] = snap
         return results
 
 
@@ -149,6 +164,12 @@ def main(argv=None):
           f"warm={sat.get('cache_warm_starts', 0)} "
           f"misses={sat.get('cache_misses', 0)} "
           f"hit_rate={sat.get('cache_hit_rate', 0.0):.2f}")
+    guard = sat.get("guard", {})
+    print(f"  guard: levels={guard.get('ladder_levels', {})} "
+          f"degradations={sum(guard.get('degradations', {}).values())} "
+          f"breaker={guard.get('breaker_events', {})} "
+          f"runtime_fallbacks="
+          f"{sum(guard.get('runtime_fallbacks', {}).values())}")
     for rid in sorted(out):
         print(f"  req{rid}: {out[rid]}")
     return out

@@ -146,6 +146,12 @@ def main(argv=None):
           f"rules_checked={ver['rules_checked']} "
           f"schedules_certified={ver['schedules_certified']} "
           f"findings_by_pass={ver['findings_by_pass']}")
+    guard = sat["guard"]
+    print(f"  guard: levels={guard['ladder_levels']} "
+          f"degradations={sum(guard['degradations'].values())} "
+          f"breaker={guard['breaker_events']} "
+          f"runtime_fallbacks={sum(guard['runtime_fallbacks'].values())} "
+          f"recoveries={guard['elastic_recoveries']}")
     assert losses[-1] < losses[0], "training did not reduce loss"
     return out
 

@@ -1,5 +1,37 @@
-from .ft import (ElasticTrainer, FailureEvent, FailureInjector,
-                 StragglerPolicy, TrainLoopConfig)
+"""Runtime robustness: elastic fault tolerance (``ft``), saturation
+guards + the degradation ladder (``guard``), and deterministic fault
+injection (``chaos``).
 
-__all__ = ["ElasticTrainer", "FailureEvent", "FailureInjector",
-           "StragglerPolicy", "TrainLoopConfig"]
+Lazy re-exports (PEP 562): ``guard``/``chaos`` are imported by deep
+core modules (egraph/beam/schedule/rules) at module scope, so this
+package ``__init__`` must not eagerly pull ``ft`` (which imports jax)
+or anything from ``repro.core`` — attribute access resolves the owning
+submodule on first use instead.
+"""
+from __future__ import annotations
+
+_FT_NAMES = ("ElasticTrainer", "FailureEvent", "FailureInjector",
+             "StragglerPolicy", "TrainLoopConfig")
+_GUARD_NAMES = ("BudgetExceeded", "CircuitBreaker", "GuardConfig",
+                "LADDER_LEVELS", "SaturationGuard", "breaker_for",
+                "breakers_snapshot", "current_guard", "guard_tick",
+                "reset_breakers", "run_ladder")
+_CHAOS_NAMES = ("FAULT_SITES", "FaultPlan", "InjectedFault",
+                "ScheduledFaults", "active_plan", "chaos_point",
+                "clear_plan", "install_plan", "plan_from_env",
+                "plan_scope")
+
+__all__ = list(_FT_NAMES + _GUARD_NAMES + _CHAOS_NAMES)
+
+
+def __getattr__(name: str):
+    if name in _FT_NAMES:
+        from . import ft as mod
+    elif name in _GUARD_NAMES:
+        from . import guard as mod  # type: ignore[no-redef]
+    elif name in _CHAOS_NAMES:
+        from . import chaos as mod  # type: ignore[no-redef]
+    else:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    return getattr(mod, name)

@@ -32,6 +32,8 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+from . import chaos
+
 
 class FailureEvent(RuntimeError):
     def __init__(self, step: int, kind: str, lost_hosts: int = 1):
@@ -42,18 +44,33 @@ class FailureEvent(RuntimeError):
 
 
 class FailureInjector:
-    """Deterministic fault schedule: {step: (kind, lost_hosts)}."""
+    """Deterministic fault schedule: {step: (kind, lost_hosts)}.
+
+    Since PR 10 this is a thin front end over the shared chaos
+    registry (:class:`repro.runtime.chaos.ScheduledFaults`, site
+    ``train_host_loss``): every fire lands in the same telemetry
+    stream as the saturator chaos sites, and an active
+    :class:`~repro.runtime.chaos.FaultPlan` naming ``train_host_loss``
+    can inject host loss on top of the step schedule."""
 
     def __init__(self, schedule: Optional[Dict[int, Any]] = None):
-        self.schedule = dict(schedule or {})
-        self.fired: List[int] = []
+        self._reg = chaos.ScheduledFaults("train_host_loss", schedule)
+
+    @property
+    def schedule(self) -> Dict[int, Any]:
+        return self._reg._armed
+
+    @property
+    def fired(self) -> List[int]:
+        return self._reg.fired
 
     def check(self, step: int):
-        ev = self.schedule.get(step)
-        if ev is not None and step not in self.fired:
-            self.fired.append(step)
+        ev = self._reg.check(step)
+        if ev is not None:
             kind, lost = ev if isinstance(ev, tuple) else (ev, 1)
             raise FailureEvent(step, kind, lost)
+        if chaos.chaos_point("train_host_loss", kernel=""):
+            raise FailureEvent(step, "chaos_host_loss", 1)
 
 
 @dataclasses.dataclass
@@ -72,6 +89,12 @@ class TrainLoopConfig:
     min_shards: int = 1
     straggler: StragglerPolicy = dataclasses.field(
         default_factory=StragglerPolicy)
+    # Simulate the full host-process restart on recovery: drop every
+    # in-process tile op (get_tile_op.cache_clear) so the rebuilt step
+    # re-saturates — exactly what a replacement host does. The
+    # persistent saturation cache + telemetry settings survive because
+    # _recover re-applies the snapshot taken at __init__.
+    simulate_host_restart: bool = False
 
 
 class ElasticTrainer:
@@ -87,6 +110,7 @@ class ElasticTrainer:
                  injector: Optional[FailureInjector] = None,
                  checkpointer=None):
         from repro.checkpoint import Checkpointer
+        from repro.kernels import ops as _ops
         self.cfg = cfg
         self.build_step = build_step
         self.params = params
@@ -94,6 +118,12 @@ class ElasticTrainer:
         self.num_shards = num_shards
         self.injector = injector or FailureInjector()
         self.ckpt = checkpointer or Checkpointer(cfg.ckpt_dir, keep=cfg.keep)
+        # Snapshot the process-global saturation settings so recovery can
+        # restore them: a simulated host loss must come back with the
+        # same persistent cache + verify level the run started with
+        # (previously a restart fell back to cold, uncached builds).
+        self._sat_cache = _ops.current_saturation_cache()
+        self._sat_verify = _ops.current_saturation_verify()
         self.log: List[Dict[str, Any]] = []
         self.losses: List[float] = []
         self.step = 0
@@ -130,6 +160,9 @@ class ElasticTrainer:
 
     # -- recovery -------------------------------------------------------------------
     def _recover(self, ev: FailureEvent):
+        from repro.core.telemetry import telemetry
+        from repro.kernels import ops as _ops
+        from repro.kernels.tile_programs import get_tile_op
         self.recoveries += 1
         new_shards = max(self.num_shards - ev.lost_hosts,
                          self.cfg.min_shards)
@@ -137,6 +170,15 @@ class ElasticTrainer:
             {"step": ev.step, "kind": ev.kind,
              "shards": (self.num_shards, new_shards)})
         self.num_shards = new_shards
+        if self.cfg.simulate_host_restart:
+            get_tile_op.cache_clear()
+        # Re-apply the saturation settings snapshotted at __init__: the
+        # rebuilt step must replay from the same persistent cache (warm
+        # restart) and keep the same verification level, even if the
+        # simulated replacement host started from process defaults.
+        _ops.set_saturation_cache(self._sat_cache)
+        _ops.set_saturation_verify(self._sat_verify)
+        telemetry().record_recovery(ev.step, ev.kind, shards=new_shards)
         # restore the last committed state; data replays deterministically
         self.ckpt.wait()
         restored_step = self.ckpt.latest_step()
